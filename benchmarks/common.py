@@ -1,0 +1,69 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+from repro.cluster.costmodel import DEFAULT as COST, CostModel
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.configs.gpt import FAMILY, tiny_gpt
+from repro.core.controller import Controller
+from repro.core.engine import PipelineEngine
+from repro.core.sandbox import CommHooks
+from repro.models.registry import count_params
+
+# analytic parameter counts for the paper's models (cached)
+_PARAMS: Dict[str, float] = {}
+
+
+def gpt_params(name: str) -> float:
+    if name not in _PARAMS:
+        if name in FAMILY:
+            _PARAMS[name] = float(count_params(FAMILY[name]))
+        else:
+            _PARAMS[name] = {"gpt-medium": 0.35e9, "gpt-2.7b": 2.7e9,
+                             "gpt-20b": 20e9, "gpt-39.1b": 39.1e9,
+                             "gpt-5.12t-moe": 5.12e12}[name]
+    return _PARAMS[name]
+
+
+def build_realexec(dp=2, pp=2, layers=4, d=128, heads=4, vocab=512,
+                   batch=8, seq=64, standby=1, machines=8,
+                   cost: Optional[CostModel] = None) -> Controller:
+    """A CPU-runnable cluster: tiny GPT, real JAX compute + compiles."""
+    cost = cost or COST
+    cluster = Cluster(machines, device_capacity=16 * 2 ** 30)
+    clock = SimClock()
+    comm = CommHooks(clock, cost)
+    eng = PipelineEngine(tiny_gpt(layers=layers, d=d, heads=heads,
+                                  vocab=vocab), dp=dp, pp=pp,
+                         global_batch=batch, seq_len=seq,
+                         cluster=cluster, clock=clock, comm=comm,
+                         cost=cost, micro_batches=2)
+    ctl = Controller(eng, cost=cost, standby_count=standby)
+    return ctl
+
+
+def emit(rows: List[dict], name: str) -> None:
+    """Print a readable table block for a benchmark."""
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(f"\n== {name} ==")
+    print(" | ".join(f"{k:>18s}" for k in keys))
+    for r in rows:
+        print(" | ".join(f"{_fmt(r.get(k)):>18s}" for k in keys))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:,.3f}" if abs(v) < 1e5 else f"{v:,.0f}"
+    return str(v)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

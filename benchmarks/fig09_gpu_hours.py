@@ -1,0 +1,69 @@
+"""Fig. 9: projected GPU-hours wasted per week, 1K -> 128K GPUs.
+
+Downtimes held constant from measured anchors (TrainMover: 1024-GPU
+value; Oobleck/Parcae: 32-GPU values, optimistically), MTTF from the
+Meta-calibrated table, 1:8.9 expected:unexpected mix, +2-minute infra
+reschedule for all systems."""
+from __future__ import annotations
+
+from benchmarks.common import COST, csv_line, emit
+from repro.core import baselines, metrics
+
+
+def run() -> list:
+    model = 10e9
+    # anchor downtimes
+    tm_e = baselines.trainmover_modelled(model, 1024).downtime
+    tm_u = baselines.trainmover_modelled(model, 1024,
+                                         unexpected=True).downtime
+    tm_u_ns = baselines.trainmover_modelled(model, 1024, unexpected=True,
+                                            standby=False).downtime
+    ob = baselines.reconfig_baseline("oobleck", 6.7e9, 32).downtime
+    pc = baselines.reconfig_baseline("parcae", 6.7e9, 32).downtime
+    mg = baselines.megatron_restart(model, 8192).downtime
+
+    rows = []
+    for gpus in (1024, 8192, 16384, 32768, 65536, 131072):
+        pts = [
+            # hot standby: the replacement machine is pre-provisioned,
+            # so no infra rescheduling lands on the critical path
+            metrics.gpu_hours_wasted_week(
+                gpus, tm_e, tm_u, standby_gpus=8, infra_reschedule_s=0.0,
+                system="trainmover(standby)"),
+            metrics.gpu_hours_wasted_week(
+                gpus, tm_e, tm_u, standby_gpus=8,
+                system="trainmover(standby,+infra)"),
+            metrics.gpu_hours_wasted_week(
+                gpus, tm_e, tm_u_ns, standby_gpus=0,
+                system="trainmover(no-standby)"),
+            metrics.gpu_hours_wasted_week(gpus, ob, ob, 0,
+                                          system="oobleck"),
+            metrics.gpu_hours_wasted_week(gpus, pc, pc, 0,
+                                          system="parcae"),
+            metrics.gpu_hours_wasted_week(gpus, mg, mg, 0,
+                                          system="megatron-lm"),
+        ]
+        for p in pts:
+            rows.append({"gpus": gpus, "system": p.system,
+                         "gpu_h_wasted_week": round(p.gpu_hours_week, 0),
+                         "events_week": round(p.events_week, 1)})
+    emit(rows, "Fig 9: projected GPU-hours wasted / week")
+
+    for gpus in (65536, 131072):
+        w = {r["system"]: r["gpu_h_wasted_week"] for r in rows
+             if r["gpus"] == gpus}
+        red_ns = 1 - w["trainmover(standby)"] / w["trainmover(no-standby)"]
+        red_ns2 = 1 - w["trainmover(standby,+infra)"] \
+            / w["trainmover(no-standby)"]
+        red_pc = 1 - w["trainmover(standby)"] / w["parcae"]
+        saved = w["trainmover(no-standby)"] - w["trainmover(standby)"]
+        print(csv_line(
+            f"fig09_{gpus//1024}k", w["trainmover(standby)"] * 1e6,
+            f"vs_no_standby={red_ns:.2f}(infra-excl)/"
+            f"{red_ns2:.2f}(infra-incl);vs_parcae={red_pc:.2f};"
+            f"gpu_h_saved_week={saved:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

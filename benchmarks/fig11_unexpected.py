@@ -1,0 +1,63 @@
+"""Fig. 11: unexpected-failure downtime (32-GPU class) with/without a
+general standby vs Megatron-LM / Oobleck / Parcae, including the
+distributed-optimizer models the reconfiguration systems cannot run."""
+from __future__ import annotations
+
+from benchmarks.common import build_realexec, csv_line, emit, gpt_params
+from repro.core import baselines
+
+MODELS = [("gpt-medium", False), ("gpt-2.7b", False), ("gpt-20b", True),
+          ("gpt-39.1b", True)]
+
+
+def run() -> list:
+    gpus = 32
+    rows = []
+    for name, dist_opt in MODELS:
+        p = gpt_params(name)
+        tm_sb = baselines.trainmover_modelled(p, gpus, unexpected=True)
+        tm_ns = baselines.trainmover_modelled(p, gpus, unexpected=True,
+                                              standby=False)
+        mg = baselines.megatron_restart(p, gpus)
+        ob = baselines.reconfig_baseline("oobleck", p, gpus,
+                                         dist_opt=dist_opt)
+        pc = baselines.reconfig_baseline("parcae", p, gpus,
+                                         dist_opt=dist_opt,
+                                         tensor_parallel=dist_opt)
+        rows.append({
+            "model": name, "dist_opt": dist_opt,
+            "tm_standby_s": round(tm_sb.downtime, 2),
+            "tm_no_standby_s": round(tm_ns.downtime, 1),
+            "megatron_s": round(mg.downtime, 1),
+            "oobleck_s": ("unsupported" if not ob.supported
+                          else round(ob.downtime, 1)),
+            "parcae_s": ("unsupported" if not pc.supported
+                         else round(pc.downtime, 1)),
+            "mg_over_tm_ns": round(mg.downtime / tm_ns.downtime, 2),
+        })
+    emit(rows, "Fig 11: unexpected-failure downtime (32 GPUs)")
+
+    # real-exec confirmation with and without standby
+    ctl = build_realexec(standby=1)
+    ctl.bootstrap_job(list(range(4)))
+    ctl.train(1)
+    r1 = ctl.unexpected_failure(ctl.engine.grid[(0, 1)])
+    ctl2 = build_realexec(standby=0)
+    ctl2.bootstrap_job(list(range(4)))
+    ctl2.train(1)
+    ctl2.save_to_storage()
+    r2 = ctl2.unexpected_failure(ctl2.engine.grid[(0, 1)],
+                                 use_standby=False)
+    rows.append({"model": "tiny(real-exec)", "dist_opt": False,
+                 "tm_standby_s": round(r1.downtime, 2),
+                 "tm_no_standby_s": round(r2.downtime, 2),
+                 "megatron_s": "", "oobleck_s": "", "parcae_s": "",
+                 "mg_over_tm_ns": ""})
+    emit(rows[-1:], "real-exec check")
+    print(csv_line("fig11_tm_standby_32", rows[0]["tm_standby_s"] * 1e6,
+                   f"no_standby={rows[0]['tm_no_standby_s']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

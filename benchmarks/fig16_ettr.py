@@ -1,0 +1,49 @@
+"""Fig. 16: ETTR under 10-minute rebalancing, 128-1024 GPUs (top) and
+the 32-GPU model x TP breakdown (bottom)."""
+from __future__ import annotations
+
+from benchmarks.common import COST, csv_line, emit, gpt_params
+from repro.core import baselines, metrics
+
+
+def run() -> list:
+    interval = 600.0
+    rows = []
+    for gpus in (128, 256, 512, 1024):
+        tm = baselines.trainmover_modelled(10e9, gpus).downtime
+        mg = baselines.megatron_restart(10e9, gpus).downtime
+        rows.append({"gpus": gpus,
+                     "trainmover": round(metrics.rebalance_ettr(
+                         interval, tm), 3),
+                     "megatron": round(metrics.rebalance_ettr(
+                         interval, mg), 3)})
+    emit(rows, "Fig 16 (top): ETTR @ 10-min rebalancing")
+
+    table = []
+    for name, dist_opt in (("gpt-medium", True), ("gpt-2.7b", True),
+                           ("gpt-20b", True), ("gpt-39.1b", True)):
+        p = gpt_params(name)
+        for tp in (1, 4, 8):
+            tm = baselines.trainmover_modelled(p, 32).downtime
+            mg = baselines.megatron_restart(p, 32).downtime
+            ob = baselines.reconfig_baseline("oobleck", p, 32,
+                                             dist_opt=dist_opt)
+            table.append({
+                "model": name, "tp": tp,
+                "trainmover": round(metrics.rebalance_ettr(interval, tm),
+                                    3),
+                "megatron": round(metrics.rebalance_ettr(interval, mg),
+                                  3),
+                "oobleck": ("unsup." if not ob.supported else
+                            round(metrics.rebalance_ettr(
+                                interval, ob.downtime), 3)),
+            })
+    emit(table, "Fig 16 (bottom): 32-GPU ETTR breakdown (dist. opt.)")
+    tm1k = rows[-1]["trainmover"]
+    print(csv_line("fig16_tm_ettr_1024", tm1k * 1e6,
+                   f"paper>=0.97; got {tm1k}"))
+    return rows + table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For every (arch x shape) cell on the single-pod 16x16 mesh:
+  compute term    = HLO_dot_FLOPs/device / peak_FLOPs       (197 TF bf16)
+  memory term     = HLO_bytes/device / HBM_bw               (819 GB/s)
+  collective term = collective_bytes/device / link_bw       (~50 GB/s ICI)
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.
+
+HLO_dot_FLOPs and collective bytes come from the loop-aware HLO
+analyzer (xla cost_analysis under-counts while bodies; see
+launch/hlo_analyzer.py and tests/test_hlo_analyzer.py). xla's numbers
+are reported alongside for reference.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import SHAPES
+from repro.models.registry import count_params, get_config
+
+PEAK_FLOPS = 197e12            # TPU v5e bf16 / chip
+HBM_BW = 819e9                 # bytes/s
+LINK_BW = 50e9                 # bytes/s per ICI link
+
+_ACTIVE_CACHE = {}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D with N = active params (MoE counts top-k + shared)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if arch not in _ACTIVE_CACHE:
+        n_total = count_params(cfg)
+        if cfg.moe is not None:
+            de = cfg.moe.d_expert or cfg.d_ff
+            per_expert = 3 * cfg.d_model * de
+            n_moe_layers = sum(1 for t in cfg.layer_types()
+                               if t in ("attn_moe", "mla_moe"))
+            inactive = per_expert * (cfg.moe.num_experts - cfg.moe.top_k) \
+                * n_moe_layers
+            _ACTIVE_CACHE[arch] = n_total - inactive
+        else:
+            _ACTIVE_CACHE[arch] = n_total
+    n = _ACTIVE_CACHE[arch]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def load_records(path: str = "results/dryrun.jsonl") -> list:
+    if not os.path.exists(path):
+        return []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def roofline_row(r: dict) -> dict:
+    devs = r.get("devices", 256)
+    flops = r.get("hlo_dot_flops_per_device", 0.0)
+    byts = r.get("xla_bytes_per_device", 0.0)
+    # TPU-equivalent collective bytes when available (the CPU backend
+    # upcasts dot-adjacent collectives to f32; see hlo_analyzer)
+    coll = r.get("collective_bytes_bf16eq",
+                 r.get("collective_bytes_per_device", 0.0))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_n = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"),
+                   (t_n, "collective"))[1]
+    mf = model_flops(r["arch"], r["shape"]) / devs
+    bound = max(t_c, t_m, t_n)
+    # roofline fraction: useful model flops at peak vs achievable step
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": round(t_c, 4), "memory_s": round(t_m, 4),
+        "collective_s": round(t_n, 4), "dominant": dominant,
+        "model_TF_dev": round(mf / 1e12, 2),
+        "useful_ratio": round(mf / flops, 3) if flops else 0.0,
+        "roofline_frac": round(frac, 4),
+        "mem_GiB": r.get("mem_per_device_gib", 0.0),
+        "fits_16g": r.get("fits_16g_hbm"),
+    }
+
+
+def run(path: str = "results/dryrun.jsonl") -> list:
+    from benchmarks.common import csv_line, emit
+    recs = [r for r in load_records(path) if r["status"] == "ok"]
+    rows = [roofline_row(r) for r in recs if r["mesh"] == "16x16"]
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    emit(rows, "Roofline (single-pod 16x16, per device)")
+    if rows:
+        worst = min((r for r in rows if r["roofline_frac"] > 0),
+                    key=lambda x: x["roofline_frac"], default=None)
+        most_coll = max(rows, key=lambda x: x["collective_s"])
+        print(csv_line("roofline_cells", len(rows) * 1e6,
+                       f"worst={worst['arch']}/{worst['shape']}"
+                       f"@{worst['roofline_frac']}"
+                       if worst else "n/a"))
+        print(csv_line("roofline_most_collective",
+                       most_coll["collective_s"] * 1e6,
+                       f"{most_coll['arch']}/{most_coll['shape']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")

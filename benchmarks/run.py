@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the
+readable tables. ``python -m benchmarks.run [--only fig08]``"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+MODULES = [
+    "table1_restart",
+    "table2_ccl_setup",
+    "fig08_downtime_scale",
+    "fig09_gpu_hours",
+    "fig10_migration_models",
+    "fig11_unexpected",
+    "fig12_batch_migration",
+    "fig13_straggler",
+    "fig15_breakdown",
+    "fig16_ettr",
+    "fig17_bandwidth",
+    "fig20_nccl_choices",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"[bench {name}: {time.time()-t0:.1f}s]")
+        except Exception:                     # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[bench {name}: FAILED]")
+    if failures:
+        print("FAILED:", failures)
+        raise SystemExit(1)
+    print("ALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 1: restart-time breakdown for 8192-GPU jobs (stop/reschedule/
+init with checkpoint, NCCL, cold-warmup shares), reproduced from the
+calibrated cost model + a measured-on-CPU analogue (real XLA compile as
+the cold-warmup component)."""
+from __future__ import annotations
+
+from benchmarks.common import COST, build_realexec, csv_line, emit
+from repro.core import baselines
+
+
+def run() -> list:
+    gpus = 8192
+    rep = baselines.megatron_restart(10e9, gpus, include_infra=True)
+    rows = []
+    total = rep.downtime + COST.job_reschedule * 0  # infra already in
+    stages = {
+        "Job Stop & Cleanup": rep.parts["stop_cleanup"],
+        "Job Reschedule": rep.parts["reschedule"],
+        "Checkpoint load": rep.parts["ckpt_load"],
+        "NCCL instantiation": rep.parts["nccl_init"],
+        "Cold warmup": rep.parts["cold_warmup"],
+    }
+    tot = sum(stages.values())
+    for k, v in stages.items():
+        rows.append({"stage": k, "seconds": round(v, 1),
+                     "share_%": round(100 * v / tot, 1)})
+    rows.append({"stage": "Total", "seconds": round(tot, 1),
+                 "share_%": 100.0})
+    emit(rows, "Table 1: 8192-GPU restart breakdown (modelled)")
+
+    # measured-on-CPU analogue: the real cost of a cold joiner in the
+    # real-exec engine (XLA compile = cold warm-up component)
+    ctl = build_realexec()
+    ctl.bootstrap_job(list(range(4)))
+    role = ctl.engine.compile_role(1, fresh=True)
+    rows.append({"stage": "measured_xla_compile_s",
+                 "seconds": round(role.compile_seconds, 2), "share_%": 0})
+    print(csv_line("table1_restart_total", tot * 1e6,
+                   f"cold_warmup_share={stages['Cold warmup']/tot:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

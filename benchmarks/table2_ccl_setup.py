@@ -1,0 +1,63 @@
+"""Table 2: CCL setup breakdown (64-GPU cluster) + the two-phase
+comparison: full group (re)build vs phase-2-only delta switchover on
+real CommGroup objects."""
+from __future__ import annotations
+
+from benchmarks.common import COST, csv_line, emit
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.core import two_phase
+from repro.core.groups import CommGroup, build_groups, compute_delta_plan
+
+
+def run() -> list:
+    rows = [
+        {"component": "Network bootstrap", "seconds": COST.ccl_bootstrap_64},
+        {"component": "Topology discovery",
+         "seconds": COST.ccl_topo_discovery_64},
+        {"component": "Conn. establish (intra)",
+         "seconds": COST.ccl_conn_intra_64},
+        {"component": "Conn. establish (inter)",
+         "seconds": COST.ccl_conn_inter_64},
+    ]
+    tot = sum(r["seconds"] for r in rows)
+    rows.append({"component": "Total", "seconds": round(tot, 2)})
+    emit(rows, "Table 2: NCCL setup breakdown (64 GPUs, calibrated)")
+
+    # two-phase vs full rebuild on a dp=8 x pp=2 machine grid
+    grid = {(d, s): d * 2 + s for d in range(8) for s in range(2)}
+    cluster = Cluster(20)
+    groups = build_groups(8, 2, grid, channels=COST.channels_per_group)
+    for g in groups.values():
+        g.establish_all()
+    clock = SimClock()
+    t_full = sum(two_phase.full_reinit(g, cluster, clock) for g in
+                 groups.values())
+    # delta: replace machine 0 with joiner 16
+    clock2 = SimClock()
+    affected = [g for g in groups.values() if 0 in g.members]
+    for g in affected:
+        two_phase.ccl_prepare_stayers(g, {0: 16}, cluster, clock2)
+        two_phase.ccl_prepare_joiners(g, {0: 16}, cluster, clock2)
+    overlap = clock2.lane_total("overlap")
+    reps = two_phase.switchover_many(affected, cluster, clock2)
+    phase2 = clock2.lane_total("downtime")
+    added = sum(r.qps_added for r in reps)
+    inherited = sum(r.qps_inherited for r in reps)
+    rows2 = [
+        {"path": "full rebuild (all groups)", "seconds": round(t_full, 2)},
+        {"path": "two-phase: phase1 (overlapped)",
+         "seconds": round(overlap, 3)},
+        {"path": "two-phase: phase2 (downtime)",
+         "seconds": round(phase2, 3)},
+        {"path": f"delta: {added} QPs re-established, "
+                 f"{inherited} inherited", "seconds": ""},
+    ]
+    emit(rows2, "Two-phase delta vs full rebuild")
+    print(csv_line("table2_ccl_phase2", phase2 * 1e6,
+                   f"reduction={(1 - phase2/max(t_full,1e-9)):.3f}"))
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

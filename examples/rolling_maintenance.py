@@ -1,0 +1,62 @@
+"""Rolling maintenance: migrate every machine of a running job, one
+batch at a time (the paper's §8.4 rebalancing use case), then verify
+the job state: every original machine was replaced, training continued,
+rings stayed valid, ETTR stays ~0.97+.
+
+    PYTHONPATH=src python examples/rolling_maintenance.py
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.configs.gpt import tiny_gpt
+from repro.core.controller import Controller
+from repro.core.engine import PipelineEngine
+from repro.core.sandbox import CommHooks
+
+
+def main() -> None:
+    cfg = tiny_gpt(layers=2, d=128, heads=4, vocab=512)
+    cluster = Cluster(16, device_capacity=32 * 2 ** 30)
+    clock = SimClock()
+    eng = PipelineEngine(cfg, dp=2, pp=2, global_batch=8, seq_len=64,
+                         cluster=cluster, clock=clock,
+                         comm=CommHooks(clock), micro_batches=2)
+    ctl = Controller(eng, standby_count=0)
+    ctl.bootstrap_job(list(range(4)))
+    ctl.train(2)
+
+    original = list(eng.grid.values())
+    print(f"original machines: {sorted(original)}")
+    total_downtime = 0.0
+    spares = iter(range(4, 16))
+    for wave in range(2):                     # 2 machines per wave
+        leavers = original[2 * wave:2 * wave + 2]
+        joiners = [next(spares), next(spares)]   # fresh machines only:
+        # the leavers are entering maintenance and may not rejoin yet
+        rep = ctl.expected_migration(leavers, joiners=joiners,
+                                     train_during_prep=1)
+        total_downtime += rep.downtime
+        print(f"wave {wave}: moved {rep.pairs} "
+              f"downtime={rep.downtime:.2f}s overlap={rep.overlap:.1f}s")
+        ctl.train(2)
+
+    now = set(eng.grid.values())
+    replaced = set(original) - now
+    print(f"replaced: {sorted(replaced)}")
+    for g in eng.groups.values():
+        assert g.validate_rings(), g.gid
+    train_time = clock.lane_total("train")
+    ettr = train_time / (train_time + clock.lane_total("downtime"))
+    print(f"rings valid; total_downtime={total_downtime:.2f}s "
+          f"ETTR={ettr:.4f}")
+    assert len(replaced) == 4, replaced
+    print("ROLLING MAINTENANCE OK")
+
+
+if __name__ == "__main__":
+    main()

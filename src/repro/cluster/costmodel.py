@@ -1,0 +1,107 @@
+"""Calibrated cost constants. Every number carries its provenance in
+the paper (or the cited system). All times in seconds, sizes in bytes,
+bandwidths in bytes/second.
+
+Measured-on-CPU costs (real XLA compile times, real array copies in the
+small end-to-end runs) are reported separately by the benchmarks; this
+module covers the costs that only exist on a real cluster.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+GB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class CostModel:
+    # ---- Table 1 (8192-GPU restart breakdown, production measurement)
+    job_stop_cleanup: float = 31.2          # 0.52 min
+    job_reschedule: float = 90.0            # 1.5 min (infra, minutes-level)
+    ckpt_load_8k: float = 93.6              # 1.56 min @ 8192 GPUs
+    nccl_instantiation_8k: float = 65.4     # 1.09 min
+    cold_warmup_8k: float = 108.0           # 1.80 min
+
+    # ---- Table 2 (64-GPU A100 cluster, GPT-10B TP4 PP2 DP8)
+    ccl_bootstrap_64: float = 2.48
+    ccl_topo_discovery_64: float = 9.40
+    ccl_conn_intra_64: float = 21.49
+    ccl_conn_inter_64: float = 17.07
+
+    # ---- §4.1: warm-up facts (GPT-10B)
+    warmup_total_10b: float = 150.0         # to stable perf, excl. NCCL
+    first_iter_jit_10b: float = 44.0        # ~6x a normal iteration
+
+    # ---- link model (A100-class; §7: RDMA "hundreds of GB/s")
+    bw_intra_node: float = 300 * GB         # NVLink-class
+    bw_inter_node: float = 50 * GB          # 400Gbps x ~rails effective
+    bw_state_transfer: float = 100 * GB     # leaver->joiner RDMA path
+    bw_storage_per_gpu: float = 1 * GB      # 0.25-2 GB/s (Figs 17/18)
+    rtt_tcp: float = 1e-3
+    qp_setup: float = 8e-3                  # per RDMA QP re-establishment
+    chan_setup_intra: float = 4e-3          # per intra channel (IPC map)
+    detect_failure: float = 2.0             # instant-localization assumed
+    iteration_barrier: float = 0.5          # drain current iteration (avg)
+
+    # ---- reliability (Meta [21] + Llama-3 [17] + paper Fig. 2)
+    # (gpus, mttf_hours) anchors; the 64K/128K points are backed out of
+    # Fig. 2's ETTR (0.835 / 0.68 with a 6.47-min restart).
+    mttf_table: tuple = ((1024, 7.9), (8192, 3.0), (16384, 2.7),
+                         (65536, 0.55), (131072, 0.23))
+    expected_to_unexpected: float = 1 / 8.9   # [17] ratio
+
+    # ---- per-group channel count (NCCL channels per comm group)
+    channels_per_group: int = 8
+
+    def mttf_hours(self, gpus: int) -> float:
+        """Job-level MTTF at `gpus` scale (log-log interp/extrapolate)."""
+        pts = sorted(self.mttf_table)
+        if gpus <= pts[0][0]:
+            lo, hi = pts[0], pts[1]
+        elif gpus >= pts[-1][0]:
+            lo, hi = pts[-2], pts[-1]
+        else:
+            lo = max(p for p in pts if p[0] <= gpus)
+            hi = min(p for p in pts if p[0] >= gpus)
+            if lo == hi:
+                return lo[1]
+        a = (math.log(hi[1]) - math.log(lo[1])) / \
+            (math.log(hi[0]) - math.log(lo[0]))
+        return lo[1] * (gpus / lo[0]) ** a
+
+    # ------- scale laws anchored to the measured points ---------------
+    def nccl_instantiation(self, gpus: int) -> float:
+        """Full NCCL (re)instantiation. Grows ~log-linear with scale;
+        anchored at 50s/64 GPUs (Table 2) and 65.4s/8192 (Table 1)."""
+        t64, t8k = 50.4, self.nccl_instantiation_8k
+        a = (t8k - t64) / (math.log2(8192) - math.log2(64))
+        return max(5.0, t64 + a * (math.log2(max(gpus, 2)) - math.log2(64)))
+
+    def ckpt_load(self, model_bytes_per_gpu: float,
+                  storage_bw: float = 0.0) -> float:
+        bw = storage_bw or self.bw_storage_per_gpu
+        return model_bytes_per_gpu / bw
+
+    def cold_warmup(self, model_bytes_per_gpu: float) -> float:
+        """JIT + allocator + dataloader warm-up; scales mildly with the
+        per-GPU model footprint (anchored: GPT-10B ~ 150s total with
+        ~44s first-iteration JIT)."""
+        ref = 20 * GB / 8                       # 10B bf16 over 8 GPUs
+        return self.cold_warmup_8k * (0.5 + 0.5 * min(
+            model_bytes_per_gpu / ref, 4.0))
+
+    def bootstrap(self, n: int) -> float:
+        """TCP bootstrap for a group of n members (multi-round
+        handshakes; anchored at 2.48s for the 8-machine cluster)."""
+        return self.ccl_bootstrap_64 * (0.3 + 0.7 * n / 8.0)
+
+    def topo_discovery(self, n: int) -> float:
+        """Ring all-gather of device metadata (anchored 9.4s @ 8)."""
+        return self.ccl_topo_discovery_64 * (0.3 + 0.7 * n / 8.0)
+
+    def transfer(self, nbytes: float, bw: float, lat: float = 0.0) -> float:
+        return lat + nbytes / bw
+
+
+DEFAULT = CostModel()

@@ -1,0 +1,60 @@
+"""Deterministic simulated clock with parallel-phase accounting.
+
+The runtime advances time in *phases*: several nodes work concurrently
+inside a phase, and the phase costs max(per-node time). Downtime vs
+overlapped (background) time is tracked separately — the whole point of
+TrainMover is moving work from the former lane to the latter.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class PhaseRecord:
+    name: str
+    start: float
+    duration: float
+    lane: str                     # "downtime" | "overlap" | "train"
+    per_node: Dict[int, float] = field(default_factory=dict)
+
+
+class SimClock:
+    def __init__(self):
+        self.now = 0.0
+        self.phases: List[PhaseRecord] = []
+        self._lane_totals: Dict[str, float] = {}
+
+    def advance(self, seconds: float, name: str = "",
+                lane: str = "train") -> None:
+        assert seconds >= 0
+        self.phases.append(PhaseRecord(name, self.now, seconds, lane))
+        self.now += seconds
+        self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) + seconds
+
+    @contextmanager
+    def parallel(self, name: str, lane: str = "downtime"):
+        """Concurrent work: `p.track(node, seconds)` accumulates per-node
+        sequential cost; the phase advances by the max."""
+        rec = PhaseRecord(name, self.now, 0.0, lane)
+
+        class _P:
+            def track(_self, node: int, seconds: float) -> None:
+                rec.per_node[node] = rec.per_node.get(node, 0.0) + seconds
+
+        yield _P()
+        rec.duration = max(rec.per_node.values(), default=0.0)
+        self.phases.append(rec)
+        self.now += rec.duration
+        self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) \
+            + rec.duration
+
+    def lane_total(self, lane: str) -> float:
+        return self._lane_totals.get(lane, 0.0)
+
+    def window(self, t0: float, t1: float, lane: Optional[str] = None):
+        return [p for p in self.phases
+                if p.start >= t0 and p.start < t1
+                and (lane is None or p.lane == lane)]

@@ -1,0 +1,280 @@
+"""The TrainMover controller (§3 workflow, §7 implementation).
+
+Coordinates roles, migrations and failure recovery over a
+PipelineEngine: issues migration signals, drives the preparation /
+switching phases, promotes standbys, and keeps the downtime/overlap
+ledgers that the benchmarks report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.costmodel import CostModel, DEFAULT
+from repro.cluster.node import Cluster, Machine, NodeStatus
+from repro.cluster.simclock import SimClock
+from repro.core import standby as standby_mod
+from repro.core import state_sync
+from repro.core import two_phase
+from repro.core.engine import PipelineEngine, stage_role_key, stage_type
+from repro.core.groups import CommGroup, GroupState, compute_delta_plan
+from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
+
+
+@dataclass
+class MigrationReport:
+    kind: str
+    downtime: float = 0.0
+    overlap: float = 0.0
+    barrier: float = 0.0
+    state_transfer_s: float = 0.0
+    state_bytes: int = 0
+    ccl_phase2_s: float = 0.0
+    promote_s: float = 0.0
+    rollback_s: float = 0.0
+    qps_added: int = 0
+    qps_dropped: int = 0
+    qps_inherited: int = 0
+    mem_overhead_bytes: float = 0.0
+    pairs: Dict[int, int] = field(default_factory=dict)
+    state_path: str = ""
+    lost_iterations: int = 0
+
+    @property
+    def delta_fraction(self) -> float:
+        return self.qps_added / max(self.qps_added + self.qps_inherited, 1)
+
+
+class Controller:
+    def __init__(self, engine: PipelineEngine,
+                 cost: CostModel = DEFAULT, standby_count: int = 1,
+                 per_iteration_ckpt: bool = True,
+                 storage_bw: float = 0.0):
+        self.engine = engine
+        self.cluster: Cluster = engine.cluster
+        self.clock: SimClock = engine.clock
+        self.cost = cost
+        self.standby_count = standby_count
+        self.per_iteration_ckpt = per_iteration_ckpt
+        self.storage_bw = storage_bw
+        self.imc = InMemoryCheckpoint()
+        self.storage: Dict[int, Tuple[int, dict]] = {}
+        self.standbys: List[int] = []
+        self.reports: List[MigrationReport] = []
+
+    # ------------------------------------------------------------ setup
+    def bootstrap_job(self, machine_ids: List[int],
+                      record: bool = True) -> None:
+        self.engine.setup(machine_ids)
+        if record:
+            self.engine.record_iteration()       # §4.2 pre-record step
+            self._tick_checkpoints()
+        free = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)]
+        for mid in free[:self.standby_count]:
+            standby_mod.prepare_general_standby(
+                self.engine, self.cluster[mid], self.clock, self.cost)
+            self.standbys.append(mid)
+
+    def _training_mids(self) -> List[int]:
+        return list(self.engine.grid.values())
+
+    def _tick_checkpoints(self) -> None:
+        if not self.per_iteration_ckpt:
+            return
+        ring = self._training_mids()
+        for mid in ring:
+            self.imc.put(mid, self.engine.step_count,
+                         self.engine.get_state(mid), ring)
+
+    def save_to_storage(self) -> None:
+        for mid in self._training_mids():
+            self.storage[mid] = (self.engine.step_count,
+                                 self.engine.get_state(mid))
+
+    def train(self, iterations: int, ckpt_every: int = 1) -> List[float]:
+        out = []
+        for _ in range(iterations):
+            out.append(self.engine.train_iteration())
+            if self.engine.step_count % ckpt_every == 0:
+                self._tick_checkpoints()
+        return out
+
+    def _affected_groups(self, mids: List[int]) -> List[CommGroup]:
+        return [g for g in self.engine.groups.values()
+                if any(m in g.members for m in mids)]
+
+    def _alloc_joiners(self, n: int) -> List[int]:
+        idle = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
+                if m.mid not in self.standbys]
+        while len(idle) < n:
+            idle.append(self.cluster.add_machine().mid)
+        return idle[:n]
+
+    # ----------------------------------------------- expected interruption
+    def expected_migration(self, leavers: List[int],
+                           joiners: Optional[List[int]] = None,
+                           train_during_prep: int = 0) -> MigrationReport:
+        """Live migration with advance notice (§3 steps 1-3)."""
+        rep = MigrationReport("expected")
+        joiners = joiners or self._alloc_joiners(len(leavers))
+        pairing = dict(zip(leavers, joiners))
+        rep.pairs = dict(pairing)
+        affected = self._affected_groups(leavers)
+        steady = {m.mid: m.device.used for m in self.cluster.machines.values()}
+        peak0 = {m.mid: m.device.peak for m in self.cluster.machines.values()}
+
+        # ---- preparation phase (overlapped with training) ----
+        t_prep0 = self.clock.now
+        for g in affected:
+            sub = {l: pairing[l] for l in g.members if l in pairing}
+            two_phase.ccl_prepare_stayers(g, sub, self.cluster, self.clock,
+                                          self.cost)
+            two_phase.ccl_prepare_joiners(g, sub, self.cluster, self.clock,
+                                          self.cost)
+        for l, j in pairing.items():
+            d, s = self.engine.coords_of(l)
+            jm = self.cluster[j]
+            jm.status = NodeStatus.PREPARING
+            self.engine.shadow_iteration(jm, stage_role_key(s), s,
+                                         lane="overlap")
+        for _ in range(train_during_prep):   # foreground keeps training
+            self.engine.train_iteration()
+            self._tick_checkpoints()
+        rep.overlap = self.clock.now - t_prep0
+
+        # ---- switching phase (downtime) ----
+        t0 = self.clock.now
+        self.clock.advance(self.cost.iteration_barrier, "drain",
+                           lane="downtime")
+        rep.barrier = self.cost.iteration_barrier
+        # one-to-one state transfers run in parallel across pairs: real
+        # copies now, single max-time charge (constant in #pairs, §8.3).
+        transfers = []
+        for l, j in pairing.items():
+            tr = state_sync.leaver_to_joiner(self.engine, l, j,
+                                             self.clock, self.cost,
+                                             charge=False)
+            transfers.append(tr)
+        par = max(t.seconds for t in transfers)
+        self.clock.advance(par, "state_xfer:parallel", lane="downtime")
+        rep.state_transfer_s = par
+        rep.state_bytes = sum(t.nbytes for t in transfers)
+
+        p2 = two_phase.switchover_many(affected, self.cluster, self.clock,
+                                       self.cost)
+        rep.ccl_phase2_s = max((r.phase2_time for r in p2), default=0.0)
+        rep.qps_added = sum(r.qps_added for r in p2)
+        rep.qps_dropped = sum(r.qps_dropped for r in p2)
+        rep.qps_inherited = sum(r.qps_inherited for r in p2)
+        for l, j in pairing.items():
+            self.engine.swap_machine(l, j)
+        rep.downtime = self.clock.now - t0
+        rep.mem_overhead_bytes = max(
+            (self.cluster[mid].device.peak - max(peak0[mid], steady[mid]))
+            for mid in steady if mid not in pairing.values())
+        self.reports.append(rep)
+        return rep
+
+    # --------------------------------------------- unexpected interruption
+    def unexpected_failure(self, failed: int,
+                           use_standby: bool = True) -> MigrationReport:
+        """Failure -> detect -> promote standby -> switch (§3 a-c)."""
+        rep = MigrationReport("unexpected")
+        d, s = self.engine.coords_of(failed)
+        fm = self.cluster[failed]
+        ckpt_step = self.engine.step_count
+        fm.fail()
+        self.imc.drop_node(failed)
+
+        t0 = self.clock.now
+        self.clock.advance(self.cost.detect_failure, "detect",
+                           lane="downtime")
+        # choose joiner
+        used_standby = bool(use_standby and self.standbys)
+        if used_standby:
+            j = self.standbys.pop(0)
+            rep.promote_s = standby_mod.promote_standby(
+                self.engine, self.cluster[j], s, self.clock, self.cost)
+        else:
+            # no standby: an elastic machine joins; its preparation
+            # (sandbox + CCL phase 1) overlaps with *nothing* (the job
+            # is stalled), but TrainMover still overlaps CCL, warmup and
+            # state transfer with each other instead of serializing.
+            j = self._alloc_joiners(1)[0]
+            jm = self.cluster[j]
+            role = self.engine.shadow_iteration(
+                jm, stage_role_key(s), s, lane="downtime",
+                fresh_compile=True)
+            rep.promote_s = role.compile_seconds
+        rep.pairs = {failed: j}
+        affected = self._affected_groups([failed])
+        if used_standby:
+            # The general standby pre-bootstrapped at job start, so the
+            # groups go straight to ready-to-switchout: only the local
+            # delta-plan computation remains (ms-level).
+            for g in affected:
+                plan = compute_delta_plan(g, {failed: j})
+                g.pending_plan = plan
+                g.pending_members = plan.new_members
+                g.state = GroupState.READY_TO_SWITCHOUT
+            self.clock.advance(0.05 * len(affected), "delta_plan",
+                               lane="downtime")
+        else:
+            for g in affected:
+                two_phase.ccl_prepare_stayers(g, {failed: j}, self.cluster,
+                                              self.clock, self.cost,
+                                              lane="downtime")
+                two_phase.ccl_prepare_joiners(g, {failed: j}, self.cluster,
+                                              self.clock, self.cost,
+                                              lane="downtime")
+
+        storage_state = self.storage.get(failed)
+        tr, step = state_sync.recover_state(
+            self.engine, failed, j, self.imc if self.per_iteration_ckpt
+            else None, self.clock, self.cost, self.storage_bw,
+            storage_state)
+        rep.state_transfer_s = tr.seconds
+        rep.state_bytes = tr.nbytes
+        rep.state_path = tr.path
+
+        # stayers roll back to the same checkpoint step (local/in-mem)
+        rep.lost_iterations = max(self.engine.step_count - step, 0)
+        if rep.lost_iterations:
+            rb = 0.0
+            for mid in self._training_mids():
+                if mid == failed:
+                    continue
+                hit = self.imc.get(mid)
+                if hit is not None and hit[0] == step:
+                    self.engine.set_state(mid, hit[1])
+                    rb = max(rb, self.cost.transfer(
+                        tree_bytes(hit[1]), self.cost.bw_intra_node))
+            self.clock.advance(rb, "rollback", lane="downtime")
+            rep.rollback_s = rb
+            self.engine.step_count = step
+
+        p2 = two_phase.switchover_many(affected, self.cluster, self.clock,
+                                       self.cost)
+        rep.ccl_phase2_s = max((r.phase2_time for r in p2), default=0.0)
+        rep.qps_added = sum(r.qps_added for r in p2)
+        rep.qps_inherited = sum(r.qps_inherited for r in p2)
+        self.engine.swap_machine(failed, j)
+        rep.downtime = self.clock.now - t0
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------- maintenance
+    def rebalance(self, n_machines: int) -> MigrationReport:
+        """Periodic load-rebalancing: migrate n machines at once."""
+        leavers = self._training_mids()[:n_machines]
+        return self.expected_migration(leavers)
+
+    def handle_straggler(self, slowdown: float = 1.2,
+                         victim: Optional[int] = None) -> MigrationReport:
+        victim = victim if victim is not None else self._training_mids()[0]
+        self.cluster[victim].straggle_factor = slowdown
+        rep = self.expected_migration([victim], train_during_prep=1)
+        return rep

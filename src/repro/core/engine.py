@@ -1,0 +1,423 @@
+"""Real-execution DP x PP pipeline engine over cluster machines.
+
+Each machine owns one pipeline stage of one data-parallel replica (TP is
+intra-machine, below this engine's granularity). All cross-machine
+traffic flows through the CommHooks seam (core/sandbox.py), so the same
+step code runs in NORMAL, RECORD and REPLAY (sandboxed shadow-iteration)
+modes — exactly the paper's PyTorch<->CCL interception point.
+
+Stage programs are real jitted JAX functions; their AOT compile times
+are measured wall-clock, which is what makes the sandbox warm-up benefit
+*measurable on CPU* (XLA compilation is the cold-warmup analogue,
+DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.cluster.costmodel import CostModel, DEFAULT
+from repro.cluster.node import Cluster, Machine, NodeStatus, Role
+from repro.cluster.simclock import SimClock
+from repro.core import groups as groups_mod
+from repro.core.sandbox import CommHooks, CommMode, Tape
+from repro.models import backbone, blocks
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train.checkpoint import tree_bytes
+
+FLOPS_PER_GPU = 125e12          # A100 bf16 at realistic MFU (sim charge)
+
+
+def stage_role_key(stage: int) -> int:
+    return stage
+
+
+def stage_type(stage: int, pp: int) -> str:
+    if pp == 1:
+        return "only"
+    if stage == 0:
+        return "first"
+    if stage == pp - 1:
+        return "last"
+    return "middle"
+
+
+# ---------------------------------------------------------------- stages
+def split_stage_params(full_params: dict, stage: int, pp: int,
+                       cfg: ArchConfig) -> dict:
+    """Contiguous layer split; stage 0 carries the embedding, the last
+    stage carries final_ln + head."""
+    L = cfg.num_layers
+    assert len(cfg.block_pattern) == 1, "engine supports period-1 archs"
+    assert L % pp == 0, (L, pp)
+    per = L // pp
+    lo, hi = stage * per, (stage + 1) * per
+    sl = jax.tree.map(lambda x: x[lo:hi], full_params["stack"]["scan"])
+    p = {"stack": {"scan": sl, "tail": ()}}
+    if stage == 0:
+        p["embed"] = full_params["embed"]
+    if stage == pp - 1:
+        p["final_ln"] = full_params["final_ln"]
+        p["head"] = (full_params["head"] if "head" in full_params
+                     else full_params["embed"].T)
+    return p
+
+
+def make_stage_fns(cfg: ArchConfig, stage: int, pp: int):
+    """Pure stage programs (unjitted): fwd / bwd / loss_bwd / update."""
+    first, last = stage == 0, stage == pp - 1
+
+    def fwd(params, x_or_tokens):
+        if first:
+            x = params["embed"][x_or_tokens]
+        else:
+            x = x_or_tokens
+        x, _ = backbone.apply_stack(params["stack"], x, cfg, 1, None,
+                                    positions=_positions(x, x_or_tokens,
+                                                         first),
+                                    impl="dense", remat=False)
+        return x
+
+    def _positions(x, tok, is_first):
+        B = (tok if is_first else x).shape[0]
+        S = (tok if is_first else x).shape[1]
+        return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def head_loss(params, x, tokens):
+        x = blocks.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]) \
+            .astype(jnp.float32)
+        return backbone.lm_loss(logits, tokens)
+
+    def stage_loss(params, x_or_tokens, tokens):
+        y = fwd(params, x_or_tokens)
+        return head_loss(params, y, tokens)
+
+    def last_bwd(params, x_or_tokens, tokens):
+        loss, (dp_, dx) = jax.value_and_grad(stage_loss, argnums=(0, 1))(
+            params, x_or_tokens, tokens)
+        return loss, dp_, dx
+
+    def mid_bwd(params, x_or_tokens, dy):
+        y, pull = jax.vjp(fwd, params, x_or_tokens)
+        dp_, dx = pull(dy)
+        return dp_, dx
+
+    return {"fwd": fwd, "last_bwd": last_bwd, "mid_bwd": mid_bwd}
+
+
+# ---------------------------------------------------------------- engine
+@dataclass
+class CompiledRole:
+    fns: Dict[str, Any]
+    compile_seconds: float
+
+
+class PipelineEngine:
+    def __init__(self, cfg: ArchConfig, dp: int, pp: int,
+                 global_batch: int, seq_len: int, cluster: Cluster,
+                 clock: SimClock, comm: CommHooks,
+                 cost: CostModel = DEFAULT, micro_batches: int = 2,
+                 seed: int = 0,
+                 adam: Optional[opt_mod.AdamCfg] = None):
+        assert global_batch % (dp * micro_batches) == 0
+        self.cfg, self.dp, self.pp = cfg, dp, pp
+        self.global_batch, self.seq_len = global_batch, seq_len
+        self.nmb = micro_batches
+        self.mb_size = global_batch // dp // micro_batches
+        self.cluster, self.clock, self.comm, self.cost = \
+            cluster, clock, comm, cost
+        self.adam = adam or opt_mod.AdamCfg(lr=1e-3, warmup_steps=10)
+        self.seed = seed
+        self.grid: Dict[Tuple[int, int], int] = {}
+        self.groups: Dict[str, groups_mod.CommGroup] = {}
+        self.stream = data_mod.SyntheticStream(
+            data_mod.DataCfg(cfg.vocab_size, global_batch, seq_len,
+                             seed=seed + 77))
+        self._role_cache: Dict[int, CompiledRole] = {}
+        self.step_count = 0
+        self.losses: List[float] = []
+        self._stage_flops = self._estimate_stage_flops()
+
+    # ------------------------------------------------------------ setup
+    def setup(self, machine_ids: List[int]) -> None:
+        assert len(machine_ids) >= self.dp * self.pp
+        full = backbone.init_params(self.cfg, jax.random.PRNGKey(self.seed),
+                                    tp=1, dtype=jnp.float32)
+        it = iter(machine_ids)
+        for d in range(self.dp):
+            for s in range(self.pp):
+                mid = next(it)
+                self.grid[(d, s)] = mid
+                m = self.cluster[mid]
+                m.status = NodeStatus.TRAINING
+                m.role = Role(d, s, self.pp)
+                params = split_stage_params(full, s, self.pp, self.cfg)
+                params = jax.tree.map(jnp.asarray, params)
+                m.payload = {"params": params,
+                             "opt": opt_mod.init_opt_state(params),
+                             "step": 0}
+                m.device.alloc(tree_bytes(m.payload) , "train_state",
+                               self.clock.now)
+                m.device.alloc(tree_bytes(params), "grad_buffer",
+                               self.clock.now)
+        self.groups = groups_mod.build_groups(
+            self.dp, self.pp, self.grid, channels=self.cost.channels_per_group)
+        for g in self.groups.values():
+            g.establish_all()
+
+    def machine(self, d: int, s: int) -> Machine:
+        return self.cluster[self.grid[(d, s)]]
+
+    def coords_of(self, mid: int) -> Tuple[int, int]:
+        for k, v in self.grid.items():
+            if v == mid:
+                return k
+        raise KeyError(mid)
+
+    def _estimate_stage_flops(self) -> float:
+        n = 0
+        cfg = self.cfg
+        per_layer = (12 * cfg.d_model ** 2 +
+                     2 * cfg.d_model * cfg.d_ff * 3)
+        tokens = self.mb_size * self.seq_len
+        return 3 * per_layer * (cfg.num_layers / self.pp) * tokens
+
+    # --------------------------------------------------------- compiling
+    def compile_role(self, stage: int, fresh: bool = False,
+                     charge: Optional[str] = None) -> CompiledRole:
+        """AOT-compile the stage programs. fresh=True bypasses the
+        engine cache (a cold machine compiling from scratch)."""
+        if not fresh and stage in self._role_cache:
+            return self._role_cache[stage]
+        cfg = self.cfg
+        fns = make_stage_fns(cfg, stage, self.pp)
+        B, S = self.mb_size, self.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        act = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        pspec = jax.eval_shape(
+            lambda k: split_stage_params(
+                backbone.init_params(self.cfg, k, tp=1,
+                                     dtype=jnp.float32),
+                stage, self.pp, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        x_in = tok if stage == 0 else act
+        t0 = time.perf_counter()
+        out = {}
+        out["fwd"] = jax.jit(fns["fwd"]).lower(pspec, x_in).compile()
+        if stage == self.pp - 1:
+            out["last_bwd"] = jax.jit(fns["last_bwd"]) \
+                .lower(pspec, x_in, tok).compile()
+        else:
+            out["mid_bwd"] = jax.jit(fns["mid_bwd"]) \
+                .lower(pspec, x_in, act).compile()
+
+        def upd(grads, opt, n_avg):
+            g = jax.tree.map(lambda x: x / n_avg, grads)
+            return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
+
+        gspec = pspec
+        ospec = jax.eval_shape(opt_mod.init_opt_state, pspec)
+        out["update"] = jax.jit(upd).lower(
+            gspec, ospec, jax.ShapeDtypeStruct((), jnp.float32)).compile()
+        dt = time.perf_counter() - t0
+        role = CompiledRole(out, dt)
+        if not fresh:
+            self._role_cache[stage] = role
+        if charge is not None:
+            self.clock.advance(dt, f"jit:{stage}", lane=charge)
+        return role
+
+    # ----------------------------------------------------------- running
+    def _mb_tokens(self, it: int, d: int, mb: int) -> jnp.ndarray:
+        batch = self.stream.batch(it)["tokens"]
+        per_d = batch.shape[0] // self.dp
+        chunk = batch[d * per_d:(d + 1) * per_d]
+        return jnp.asarray(chunk[mb * self.mb_size:(mb + 1) * self.mb_size])
+
+    def train_iteration(self, it: Optional[int] = None,
+                        lane: str = "train") -> float:
+        """One synchronous iteration across the whole grid."""
+        it = self.step_count if it is None else it
+        comm = self.comm
+        comm.reset_counters()
+        losses = []
+        grads_acc: Dict[Tuple[int, int], Any] = {}
+        slow = max(m.straggle_factor
+                   for m in (self.cluster[mid] for mid in self.grid.values()))
+        # compute-time charge (simulated cluster time, straggler-aware)
+        t_comp = 3 * self._stage_flops * self.nmb / \
+            (FLOPS_PER_GPU * self.cluster[self.grid[(0, 0)]].gpus)
+        self.clock.advance(t_comp * slow, "compute", lane=lane)
+
+        for d in range(self.dp):
+            acts: Dict[Tuple[int, int], Any] = {}
+            for mb in range(self.nmb):
+                tokens = self._mb_tokens(it, d, mb)
+                x = tokens
+                for s in range(self.pp):
+                    m = self.machine(d, s)
+                    fns = self.compile_role(s).fns
+                    if s > 0:
+                        x = comm.p2p_recv(stage_role_key(s), "act",
+                                          src=self.grid[(d, s - 1)],
+                                          dst=m.mid, value=x)
+                    acts[(s, mb)] = x
+                    if s < self.pp - 1:
+                        y = fns["fwd"](m.payload["params"], x)
+                        comm.p2p_send(stage_role_key(s), "act", m.mid,
+                                      self.grid[(d, s + 1)], y)
+                        x = y
+                # backward
+                dy = None
+                for s in reversed(range(self.pp)):
+                    m = self.machine(d, s)
+                    fns = self.compile_role(s).fns
+                    if s == self.pp - 1:
+                        loss, dp_, dx = fns["last_bwd"](
+                            m.payload["params"], acts[(s, mb)], tokens)
+                        losses.append(float(loss))
+                    else:
+                        dy = comm.p2p_recv(stage_role_key(s), "grad",
+                                           src=self.grid[(d, s + 1)],
+                                           dst=m.mid, value=dy)
+                        dp_, dx = fns["mid_bwd"](m.payload["params"],
+                                                 acts[(s, mb)], dy)
+                    if s > 0:
+                        comm.p2p_send(stage_role_key(s), "grad", m.mid,
+                                      self.grid[(d, s - 1)], dx)
+                        dy = dx
+                    key = (d, s)
+                    grads_acc[key] = dp_ if key not in grads_acc else \
+                        jax.tree.map(jnp.add, grads_acc[key], dp_)
+
+        # DP gradient all-reduce per stage + update
+        for s in range(self.pp):
+            stacked = [grads_acc[(d, s)] for d in range(self.dp)]
+            leaves0, tdef = jax.tree.flatten(stacked[0])
+            reduced_leaves = []
+            for li in range(len(leaves0)):
+                arrs = [jax.tree.leaves(stacked[d])[li]
+                        for d in range(self.dp)]
+                red = self.comm.all_reduce(stage_role_key(s),
+                                           f"grad{li}", arrs)
+                reduced_leaves.append(red)
+            reduced = jax.tree.unflatten(tdef, reduced_leaves)
+            navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
+            for d in range(self.dp):
+                m = self.machine(d, s)
+                fns = self.compile_role(s).fns
+                new_p, new_opt, _ = fns["update"](reduced,
+                                                  m.payload["opt"], navg)
+                m.payload["params"] = new_p
+                m.payload["opt"] = new_opt
+                m.payload["step"] = it + 1
+        self.comm.barrier("iter")
+        self.step_count = it + 1
+        loss = float(np.mean(losses))
+        self.losses.append(loss)
+        return loss
+
+    # ---------------------------------------------------- record / replay
+    def record_iteration(self, it: Optional[int] = None) -> Tape:
+        """First-iteration pre-record (§4.2): run one normal iteration
+        with the recording hook attached, then alias stage tapes onto
+        the three general-standby role types."""
+        prev = self.comm.mode
+        self.comm.mode = CommMode.RECORD
+        self.train_iteration(it)
+        self.comm.mode = prev
+        tape = self.comm.tape
+        reps = {"first": 0, "last": self.pp - 1,
+                "middle": 1 if self.pp > 2 else 0,
+                "only": 0}
+        for role_type in (("only",) if self.pp == 1
+                          else ("first", "middle", "last")):
+            tape.alias_role(stage_role_key(reps[role_type]), role_type)
+        tape.meta["pp"] = self.pp
+        tape.meta["recorded_step"] = self.step_count - 1
+        return tape
+
+    def shadow_iteration(self, machine: Machine, role_key,
+                         stage: int, state: Optional[dict] = None,
+                         lane: str = "overlap",
+                         fresh_compile: bool = True) -> CompiledRole:
+        """Sandboxed shadow iteration on a joiner/standby (§4.2 replay).
+
+        Compiles the role's programs (REAL XLA compile, measured) and
+        executes one isolated iteration fed from the tape. Returns the
+        compiled role; the machine's warm_roles cache is populated."""
+        prev_mode, prev_members = self.comm.mode, self.comm.sandbox_members
+        self.comm.mode = CommMode.REPLAY
+        self.comm.sandbox_members = {machine.mid}
+        self.comm.reset_counters()
+        try:
+            role = self.compile_role(stage, fresh=fresh_compile)
+            # machine state for the shadow run: checkpoint pull or zeros
+            if state is None:
+                full = backbone.init_params(
+                    self.cfg, jax.random.PRNGKey(self.seed), tp=1,
+                    dtype=jnp.float32)
+                params = jax.tree.map(
+                    jnp.asarray,
+                    split_stage_params(full, stage, self.pp, self.cfg))
+                state = {"params": params,
+                         "opt": opt_mod.init_opt_state(params), "step": 0}
+            t0 = time.perf_counter()
+            tokens = self._mb_tokens(0, 0, 0)
+            x = tokens if stage == 0 else self.comm.p2p_recv(
+                role_key, "act", src=-1, dst=machine.mid, value=None)
+            if stage == self.pp - 1:
+                _, dp_, _ = role.fns["last_bwd"](state["params"], x, tokens)
+            else:
+                y = role.fns["fwd"](state["params"], x)
+                dy = self.comm.p2p_recv(role_key, "grad", src=-1,
+                                        dst=machine.mid, value=None)
+                dp_, _ = role.fns["mid_bwd"](state["params"], x, dy)
+            leaves = jax.tree.leaves(dp_)
+            red = [self.comm.all_reduce(role_key, f"grad{i}", [g])
+                   for i, g in enumerate(leaves)]
+            reduced = jax.tree.unflatten(jax.tree.structure(dp_), red)
+            navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
+            role.fns["update"](reduced, state["opt"], navg)
+            shadow_exec = time.perf_counter() - t0
+            machine.warm_roles[role_key] = role
+            machine.payload.setdefault("sandbox_state", state)
+            self.clock.advance(role.compile_seconds + shadow_exec,
+                               f"shadow:{role_key}", lane=lane)
+            return role
+        finally:
+            self.comm.mode = prev_mode
+            self.comm.sandbox_members = prev_members
+
+    # ------------------------------------------------------- state moves
+    def get_state(self, mid: int) -> dict:
+        m = self.cluster[mid]
+        return jax.tree.map(np.asarray,
+                            {k: m.payload[k]
+                             for k in ("params", "opt", "step")})
+
+    def set_state(self, mid: int, state: dict) -> None:
+        m = self.cluster[mid]
+        m.payload.update(jax.tree.map(jnp.asarray, state))
+
+    def swap_machine(self, leaver: int, joiner: int) -> None:
+        """Replace leaver with joiner in the grid + role bookkeeping."""
+        d, s = self.coords_of(leaver)
+        self.grid[(d, s)] = joiner
+        jm, lm = self.cluster[joiner], self.cluster[leaver]
+        jm.role, lm.role = lm.role, None
+        jm.status = NodeStatus.TRAINING
+        if lm.status != NodeStatus.DEAD:
+            lm.status = NodeStatus.IDLE
+
+    def state_bytes(self, mid: int) -> int:
+        return tree_bytes({k: self.cluster[mid].payload[k]
+                           for k in ("params", "opt")})

@@ -1,0 +1,166 @@
+"""Communication groups: membership, per-channel ring topology and
+connection objects. This is the runtime analogue of an NCCL communicator
+that TrainMover's two-phase setup manipulates.
+
+A group holds `channels_per_group` rings (NCCL channels). Connections
+are directed edges (src -> dst) per channel; intra-machine "connections"
+(TP) are implicit (they never change during machine-level migration and
+are inherited wholesale, §5.2).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+
+class GroupState(enum.Enum):
+    INIT = "init"
+    ACTIVE = "active"
+    PREPARING = "preparing"            # phase 1 in flight
+    READY_TO_SWITCHOUT = "ready_to_switchout"
+
+
+@dataclass(frozen=True)
+class Connection:
+    src: int
+    dst: int
+    channel: int
+    inter: bool = True                 # inter-machine (RDMA QP) link
+
+    def key(self) -> Tuple[int, int, int]:
+        return (self.src, self.dst, self.channel)
+
+
+@dataclass
+class CommGroup:
+    gid: str
+    kind: str                          # "dp" | "pp" | "tp" | "transfer"
+    members: List[int]                 # ordered machine ids (ring order)
+    channels: int = 8
+    state: GroupState = GroupState.INIT
+    connections: Dict[Tuple[int, int, int], Connection] = \
+        field(default_factory=dict)
+    # phase-1 staging area
+    pending_plan: Optional["DeltaPlan"] = None
+    pending_members: Optional[List[int]] = None
+    bootstrap_peers: Set[int] = field(default_factory=set)
+
+    def ring_connections(self, members: Optional[Sequence[int]] = None
+                         ) -> List[Connection]:
+        members = list(members if members is not None else self.members)
+        conns = []
+        n = len(members)
+        if n < 2:
+            return conns
+        for ch in range(self.channels):
+            # channel rings are rotated so traffic spreads across links
+            order = members[ch % n:] + members[:ch % n]
+            for i, src in enumerate(order):
+                conns.append(Connection(src, order[(i + 1) % n], ch))
+        return conns
+
+    def establish_all(self) -> int:
+        """Full (from-scratch) connection establishment."""
+        self.connections = {c.key(): c for c in self.ring_connections()}
+        self.state = GroupState.ACTIVE
+        self.bootstrap_peers = set(self.members)
+        return len(self.connections)
+
+    def conn_count(self) -> int:
+        return len(self.connections)
+
+    def validate_rings(self) -> bool:
+        """Every channel's connections must form one Hamiltonian cycle
+        over the current membership."""
+        members = set(self.members)
+        for ch in range(self.channels):
+            nxt = {c.src: c.dst for c in self.connections.values()
+                   if c.channel == ch}
+            if set(nxt) != members:
+                return False
+            seen, cur = set(), self.members[0]
+            for _ in range(len(members)):
+                if cur in seen:
+                    return False
+                seen.add(cur)
+                cur = nxt[cur]
+            if seen != members or cur != self.members[0]:
+                return False
+        return True
+
+
+@dataclass
+class DeltaPlan:
+    """Minimal channel-level reconfiguration for a membership change."""
+    group: str
+    replace: Dict[int, int]            # leaver -> joiner
+    add: List[Connection] = field(default_factory=list)
+    drop: List[Connection] = field(default_factory=list)
+    inherited: int = 0                 # untouched connections
+    new_members: List[int] = field(default_factory=list)
+
+    @property
+    def delta_fraction(self) -> float:
+        total = len(self.add) + self.inherited
+        return len(self.add) / max(total, 1)
+
+
+def compute_delta_plan(group: CommGroup,
+                       replace: Dict[int, int]) -> DeltaPlan:
+    """Delta topology (§5.2): splice joiners into each channel ring in
+    place of their leavers. Only connections adjacent to a leaver
+    change; everything else is inherited.
+
+    With the in-place splice the new ring order equals the old with
+    leavers substituted, so |add| = |drop| and both are bounded by
+    2 * channels * |replace| regardless of group size.
+    """
+    old_members = list(group.members)
+    new_members = [replace.get(m, m) for m in old_members]
+    old_conns = {c.key(): c for c in group.ring_connections(old_members)}
+    new_conns = {c.key(): c for c in group.ring_connections(new_members)}
+    add = [c for k, c in new_conns.items() if k not in old_conns]
+    drop = [c for k, c in old_conns.items() if k not in new_conns]
+    inherited = len(new_conns) - len(add)
+    return DeltaPlan(group.gid, dict(replace), add, drop, inherited,
+                     new_members)
+
+
+def apply_delta(group: CommGroup, plan: DeltaPlan) -> None:
+    for c in plan.drop:
+        group.connections.pop(c.key(), None)
+    for c in plan.add:
+        group.connections[c.key()] = c
+    group.members = list(plan.new_members)
+    group.state = GroupState.ACTIVE
+    group.pending_plan = None
+    group.pending_members = None
+
+
+# ------------------------------------------------------------ layouts
+def build_groups(dp: int, pp: int, machine_grid: Dict[Tuple[int, int], int],
+                 channels: int = 8) -> Dict[str, CommGroup]:
+    """Machine-level comm groups for a (dp, pp) grid. TP is
+    intra-machine and needs no group object here.
+
+    - one DP group per pipeline stage (ring over dp replicas)
+    - one PP group per dp chain (ring over stages)
+    """
+    groups: Dict[str, CommGroup] = {}
+    for stage in range(pp):
+        members = [machine_grid[(d, stage)] for d in range(dp)]
+        if len(members) > 1:
+            groups[f"dp.s{stage}"] = CommGroup(
+                f"dp.s{stage}", "dp", members, channels)
+    for d in range(dp):
+        members = [machine_grid[(d, stage)] for stage in range(pp)]
+        if len(members) > 1:
+            groups[f"pp.d{d}"] = CommGroup(
+                f"pp.d{d}", "pp", members, channels)
+    return groups
+
+
+def groups_of(groups: Dict[str, CommGroup], mid: int) -> List[CommGroup]:
+    return [g for g in groups.values() if mid in g.members]

@@ -1,0 +1,165 @@
+"""Communication-free sandbox: collective record-replay (§4).
+
+The hook layer sits between the training engine and the CCL (the
+analogue of the paper's PyTorch<->NCCL interception layer). Three modes:
+
+  NORMAL  - collectives execute for real (ring math over machine shards)
+  RECORD  - execute + persist every collective *output* to the Tape,
+            keyed role-relatively so any machine adopting that role can
+            replay it (general-standby symmetry, §6)
+  REPLAY  - sandboxed: calls that would cross the sandbox boundary are
+            served from the Tape; send/barrier are bypassed; collectives
+            fully inside the sandbox run natively (§4.3 boundary-aware
+            replay)
+
+Recording happens once during the first iteration(s) of the job; the
+hook is then removed (mode returns to NORMAL) and steady-state training
+pays zero overhead.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.cluster.costmodel import CostModel, DEFAULT
+from repro.cluster.simclock import SimClock
+
+
+class CommMode(enum.Enum):
+    NORMAL = "normal"
+    RECORD = "record"
+    REPLAY = "replay"
+
+
+@dataclass
+class Tape:
+    """Role-relative recorded collective outputs.
+
+    Keys: (role_key, op, tag, call_index). role_key is the pipeline
+    stage index for expected migrations and the stage *type*
+    (first/middle/last/only) for the general standby."""
+    entries: Dict[Tuple, np.ndarray] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def put(self, key: Tuple, value) -> None:
+        self.entries[key] = np.asarray(value)
+
+    def get(self, key: Tuple) -> np.ndarray:
+        if key not in self.entries:
+            raise KeyError(f"tape miss: {key}; have "
+                           f"{sorted(self.entries)[:8]}...")
+        return self.entries[key]
+
+    def has(self, key: Tuple) -> bool:
+        return key in self.entries
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self.entries.values())
+
+    def for_role(self, role_key) -> Dict[Tuple, np.ndarray]:
+        return {k: v for k, v in self.entries.items() if k[0] == role_key}
+
+    def alias_role(self, src_role, dst_role) -> int:
+        """Reuse one role's recordings for a symmetric role (dedup of
+        duplicated training roles, §4.3). Returns entries aliased."""
+        n = 0
+        for k, v in list(self.entries.items()):
+            if k[0] == src_role:
+                self.entries[(dst_role,) + k[1:]] = v
+                n += 1
+        return n
+
+
+class CommHooks:
+    """The engine-facing collective interface with interception."""
+
+    def __init__(self, clock: SimClock, cost: CostModel = DEFAULT,
+                 tape: Optional[Tape] = None,
+                 mode: CommMode = CommMode.NORMAL,
+                 lane: str = "train"):
+        self.clock = clock
+        self.cost = cost
+        self.tape = tape if tape is not None else Tape()
+        self.mode = mode
+        self.lane = lane
+        self.sandbox_members: Set[int] = set()
+        self._counters: Dict[Tuple, int] = {}
+        self.replay_bytes = 0
+        self.record_bytes = 0
+
+    # ---------------------------------------------------------- helpers
+    def _next_idx(self, role_key, op, tag) -> int:
+        k = (role_key, op, tag)
+        i = self._counters.get(k, 0)
+        self._counters[k] = i + 1
+        return i
+
+    def reset_counters(self) -> None:
+        self._counters.clear()
+
+    def _charge(self, nbytes: float, inter: bool, name: str,
+                participants: int = 2) -> None:
+        bw = self.cost.bw_inter_node if inter else self.cost.bw_intra_node
+        if participants > 2:     # ring collective: 2(n-1)/n traversals
+            n = participants
+            t = self.cost.rtt_tcp + 2 * (n - 1) / n * nbytes / bw
+        else:
+            t = self.cost.rtt_tcp + nbytes / bw
+        self.clock.advance(t, name, lane=self.lane)
+
+    # ------------------------------------------------------ collectives
+    def all_reduce(self, role_key, tag: str, arrays: Sequence,
+                   mid: Optional[int] = None):
+        """DP ring all-reduce across `arrays` (one per member). In
+        REPLAY mode only one array (the sandboxed caller's) is passed
+        and the recorded result is returned."""
+        idx = self._next_idx(role_key, "all_reduce", tag)
+        key = (role_key, "all_reduce", tag, idx)
+        if self.mode == CommMode.REPLAY:
+            self.replay_bytes += self.tape.get(key).nbytes
+            return self.tape.get(key)
+        out = arrays[0]
+        for a in arrays[1:]:
+            out = out + a
+        nb = np.asarray(arrays[0]).nbytes
+        self._charge(nb, inter=True, name=f"allreduce:{tag}",
+                     participants=len(arrays))
+        if self.mode == CommMode.RECORD:
+            self.tape.put(key, out)
+            self.record_bytes += np.asarray(out).nbytes
+        return out
+
+    def p2p_recv(self, role_key, tag: str, src: int, dst: int, value):
+        """Receive `value` sent by src. In REPLAY mode, if src is
+        outside the sandbox, the recorded tensor is served instead; if
+        src is inside (batch migration), the live value passes through
+        (§4.3)."""
+        idx = self._next_idx(role_key, "p2p", tag)
+        key = (role_key, "p2p", tag, idx)
+        if self.mode == CommMode.REPLAY:
+            if src in self.sandbox_members and value is not None:
+                return value
+            self.replay_bytes += self.tape.get(key).nbytes
+            return self.tape.get(key)
+        nb = np.asarray(value).nbytes
+        self._charge(nb, inter=True, name=f"p2p:{tag}")
+        if self.mode == CommMode.RECORD:
+            self.tape.put(key, value)
+            self.record_bytes += nb
+        return value
+
+    def p2p_send(self, role_key, tag: str, src: int, dst: int, value):
+        """Sends are bypassed in REPLAY (do not affect caller state)."""
+        if self.mode == CommMode.REPLAY and dst not in self.sandbox_members:
+            return
+        # charged on the recv side
+        return
+
+    def barrier(self, tag: str = "") -> None:
+        if self.mode == CommMode.REPLAY:
+            return
+        self.clock.advance(self.cost.rtt_tcp * 2, f"barrier:{tag}",
+                           lane=self.lane)

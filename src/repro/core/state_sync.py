@@ -1,0 +1,94 @@
+"""State synchronization (§7): one-to-one leaver->joiner transfer for
+expected events; redundancy/checkpoint paths for unexpected failures.
+
+The zero-memory-overhead choreography of §8.5 is enforced through the
+ledgers: the leaver repurposes its gradient buffer as the transfer
+channel; the joiner stages the transfer in the headroom left by the
+not-yet-established phase-2 inter connections, and the channel is torn
+down before switchover completes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.costmodel import CostModel, DEFAULT
+from repro.cluster.node import Cluster, Machine
+from repro.cluster.simclock import SimClock
+from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
+
+
+@dataclass
+class TransferReport:
+    nbytes: int
+    seconds: float
+    path: str                   # leaver | neighbor | storage
+    joiner_peak_delta: float    # device-memory overhead observed (bytes)
+
+
+def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
+                     cost: CostModel = DEFAULT, lane: str = "downtime",
+                     charge: bool = True) -> TransferReport:
+    """Expected-event path: direct GPU-to-GPU state copy over RDMA.
+    With charge=False the caller accounts the (parallel) time itself."""
+    cl: Cluster = engine.cluster
+    lm, jm = cl[leaver], cl[joiner]
+    state = engine.get_state(leaver)
+    nbytes = tree_bytes(state)
+    baseline_peak = jm.device.used
+
+    # Leaver: training is over for it — the gradient buffer becomes the
+    # NCCL transfer channel (§8.5), so no new device memory there.
+    gbuf = lm.device.tagged("grad_buffer")
+    lm.device.free("grad_buffer", clock.now)
+    lm.device.alloc(gbuf, "xfer_channel", clock.now)
+    # Joiner: phase-2 inter buffers are not established yet -> headroom.
+    jm.device.alloc(64 * 2 ** 20, "xfer_channel", clock.now)
+
+    t = cost.transfer(nbytes, cost.bw_state_transfer, cost.rtt_tcp)
+    if charge:
+        clock.advance(t, f"state_xfer:{leaver}->{joiner}", lane=lane)
+
+    engine.set_state(joiner, state)      # the real copy
+    jm.device.alloc(nbytes, "train_state", clock.now)
+    jm.device.alloc(tree_bytes(state["params"]), "grad_buffer", clock.now)
+    # tear the channel down before phase 2 completes
+    jm.device.free("xfer_channel", clock.now)
+    lm.device.free("xfer_channel", clock.now)
+    peak_delta = jm.device.peak - baseline_peak - nbytes \
+        - tree_bytes(state["params"])
+    return TransferReport(nbytes, t, "leaver", max(peak_delta, 0.0))
+
+
+def recover_state(engine, failed: int, joiner: int,
+                  imc: Optional[InMemoryCheckpoint], clock: SimClock,
+                  cost: CostModel = DEFAULT, storage_bw: float = 0.0,
+                  storage_state=None,
+                  lane: str = "downtime") -> Tuple[TransferReport, int]:
+    """Unexpected-failure path: neighbour in-memory checkpoint if the
+    redundancy exists, else remote storage (distributed-optimizer case).
+    Returns (report, checkpoint_step)."""
+    cl: Cluster = engine.cluster
+    jm = cl[joiner]
+    hit = imc.get(failed) if imc is not None else None
+    if hit is not None:
+        step, state = hit
+        nbytes = tree_bytes(state)
+        # neighbour CPU memory -> joiner GPU over RDMA
+        t = cost.transfer(nbytes, cost.bw_state_transfer, cost.rtt_tcp)
+        path = "neighbor"
+    else:
+        assert storage_state is not None, \
+            "no redundancy and no storage checkpoint"
+        step, state = storage_state
+        nbytes = tree_bytes(state)
+        bw = (storage_bw or cost.bw_storage_per_gpu) * jm.gpus
+        t = cost.transfer(nbytes, bw, cost.rtt_tcp)
+        path = "storage"
+    clock.advance(t, f"state_recover:{failed}->{joiner}", lane=lane)
+    engine.set_state(joiner, state)
+    jm.device.alloc(nbytes, "train_state", clock.now)
+    jm.device.alloc(tree_bytes(state["params"]), "grad_buffer", clock.now)
+    return TransferReport(nbytes, t, path, 0.0), step

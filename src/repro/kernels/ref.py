@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, causal=True, scale=None):
+    """q,k,v: (BH, S, d)."""
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    s = jnp.einsum("bsk,btk->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bst,btk->bsk", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def grouped_matmul(x, w):
+    """x: (E, C, D), w: (E, D, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rglru_scan(a, x):
+    """h_t = a_t h_{t-1} + x_t along axis 1 (B, S, D)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), x.astype(jnp.float32)), axis=1)
+    return h.astype(x.dtype)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk=64):
+    """Reference via the model-layer implementation (itself validated
+    against mlstm_stepwise below). Shapes: (BH, S, K) / (BH, S)."""
+    from repro.models.xlstm import mlstm_chunkwise as model_impl
+    bh, s, kd = q.shape
+    h, _ = model_impl(q.reshape(bh, 1, s, kd), k.reshape(bh, 1, s, kd),
+                      v.reshape(bh, 1, s, kd), log_i.reshape(bh, 1, s),
+                      log_f.reshape(bh, 1, s), None, chunk=chunk)
+    return h.reshape(bh, s, kd)
+
+
+def mlstm_stepwise(q, k, v, log_i, log_f):
+    """Exact per-step stabilized recurrence (independent oracle)."""
+    bh, s, kd = q.shape
+    scale = kd ** -0.5
+
+    def step(carry, t):
+        C, n, m = carry
+        i_t, f_t = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(f_t + m, i_t)
+        ip = jnp.exp(i_t - m_new)[:, None]
+        fp = jnp.exp(f_t + m - m_new)[:, None]
+        kv = k[:, t, :, None] * v[:, t, None, :]
+        C = fp[..., None] * C + ip[..., None] * kv
+        n = fp * n + ip * k[:, t]
+        qt = q[:, t] * scale
+        num = jnp.einsum("bk,bkv->bv", qt, C)
+        den = jnp.einsum("bk,bk->b", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[:, None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((bh, kd, kd), jnp.float32)
+    n0 = jnp.zeros((bh, kd), jnp.float32)
+    m0 = jnp.full((bh,), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(s))
+    return hs.transpose(1, 0, 2).astype(q.dtype)

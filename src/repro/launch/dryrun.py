@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh)
+cell against the production meshes and record roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+
+The XLA_FLAGS line above MUST run before any other import (jax locks
+the device count at first init); nothing else in the repo sets it.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import SHAPES, cell_supported        # noqa: E402
+from repro.launch import hlo_analyzer                        # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.specs import input_specs, step_fn_for      # noqa: E402
+from repro.models import registry                            # noqa: E402
+
+HBM_BUDGET = 16 * 1024 ** 3          # TPU v5e per-chip HBM
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             collect_hlo: bool = True) -> dict:
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    cfg = registry.get_config(arch_id)
+    ok, why = cell_supported(cfg, SHAPES[shape_name])
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        spec = input_specs(arch_id, shape_name, mesh)
+        fn = step_fn_for(spec, mesh)
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=spec["in_shardings"],
+                             out_shardings=spec["out_shardings"],
+                             donate_argnums=spec["donate_argnums"])
+            lowered = jitted.lower(*spec["args"])
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        rec.update(
+            status="ok", lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            devices=int(mesh.devices.size),
+            xla_flops_per_device=float(ca.get("flops", 0.0)),
+            xla_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+            mem_argument=int(ma.argument_size_in_bytes),
+            mem_output=int(ma.output_size_in_bytes),
+            mem_temp=int(ma.temp_size_in_bytes),
+            mem_alias=int(ma.alias_size_in_bytes),
+        )
+        live = rec["mem_argument"] + rec["mem_temp"] - rec["mem_alias"]
+        rec["mem_per_device_gib"] = round(live / 2 ** 30, 3)
+        rec["fits_16g_hbm"] = bool(live <= HBM_BUDGET)
+        if collect_hlo:
+            t3 = time.time()
+            an = hlo_analyzer.analyze(compiled.as_text())
+            rec.update(
+                hlo_dot_flops_per_device=an.dot_flops,
+                collective_bytes_per_device=an.collective_bytes,
+                collective_bytes_bf16eq=an.collective_bytes_bf16eq,
+                per_collective={k: v for k, v in an.per_collective.items()
+                                if v["count"]},
+                while_trips=an.while_trips[:24],
+                analyze_s=round(time.time() - t3, 2),
+            )
+    except Exception as e:                        # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-1800:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = registry.ARCH_IDS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    with open(args.out, "a") as f:
+        for a, s, m in cells:
+            rec = run_cell(a, s, m, collect_hlo=not args.no_hlo)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            tag = rec["status"].upper()
+            n_ok += tag == "OK"
+            n_skip += tag == "SKIPPED"
+            n_err += tag == "ERROR"
+            extra = ""
+            if rec["status"] == "ok":
+                extra = (f" compile={rec['compile_s']}s "
+                         f"mem={rec['mem_per_device_gib']}GiB "
+                         f"dotTF={rec.get('hlo_dot_flops_per_device', 0)/1e12:.2f} "
+                         f"collGB={rec.get('collective_bytes_per_device', 0)/2**30:.2f}")
+            elif rec["status"] == "error":
+                extra = " " + rec["error"][:160]
+            print(f"[{tag:7s}] {a:22s} {s:12s} {rec['mesh']:8s}{extra}",
+                  flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

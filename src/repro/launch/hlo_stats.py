@@ -1,0 +1,62 @@
+"""Roofline inputs from a compiled executable: cost_analysis() FLOPs /
+bytes, memory_analysis(), and collective bytes parsed out of the HLO
+text (cost_analysis does not report collectives).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+# bytes moved per device as a multiple of the result size
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from compiled HLO text.
+
+    Matches lines `%x = TYPE all-gather(...)`; `bytes` is the result
+    size times an op-specific traffic multiplier (all-reduce moves the
+    payload twice in ring form). Fused `all-reduce-start/-done` pairs
+    are counted once via the -start op.
+    """
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            m = re.match(rf"([^ ]+) {kind}(-start)?\(", rhs)
+            if m:
+                tb = _type_bytes(m.group(1))
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += tb * _MULT[kind]
+                break
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())

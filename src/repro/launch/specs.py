@@ -1,0 +1,99 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape)
+cell — weak-type-correct, shardable, zero allocation. The dry-run and
+the roofline read exclusively from here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCfg
+from repro.models import registry
+from repro.train import step as step_mod
+
+
+def fit_sharding(spec: jax.ShapeDtypeStruct,
+                 sh: NamedSharding) -> NamedSharding:
+    """Drop mesh axes from dims they do not divide (GSPMD rejects
+    uneven *input* shardings; e.g. long_500k's global_batch=1)."""
+    sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+    entries = list(sh.spec) + [None] * (len(spec.shape) - len(sh.spec))
+    changed = False
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        extent = 1
+        for a in axes:
+            extent *= sizes[a]
+        if spec.shape[i] % extent:
+            entries[i] = None
+            changed = True
+    return NamedSharding(sh.mesh, P(*entries)) if changed else sh
+
+
+def fit_shardings(specs, shardings):
+    return jax.tree.map(fit_sharding, specs, shardings)
+
+
+def input_specs(arch_id: str, shape_name: str,
+                mesh: Optional[Mesh] = None,
+                reduced: bool = False) -> Dict[str, Any]:
+    """Everything needed to lower the cell's step function.
+
+    Returns {kind, fn_name, args: tuple(ShapeDtypeStruct trees),
+    in_shardings, out_shardings, donate_argnums}.
+    """
+    cfg = (registry.reduced_config(arch_id) if reduced
+           else registry.get_config(arch_id))
+    shape = SHAPES[shape_name]
+    run = step_mod.default_run_cfg()
+    if mesh is None:
+        raise ValueError("dry-run requires a mesh")
+
+    if shape.kind == "train":
+        state = step_mod.state_specs(cfg, run, mesh)
+        batch = step_mod.batch_specs(cfg, shape)
+        state_sh = fit_shardings(state, step_mod.state_shardings(cfg, mesh))
+        batch_sh = fit_shardings(batch,
+                                 step_mod.batch_shardings(cfg, shape, mesh))
+        return dict(kind="train", cfg=cfg, run=run,
+                    args=(state, batch),
+                    in_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, None),
+                    donate_argnums=(0,))
+
+    params = step_mod.param_specs(cfg, mesh)
+    params_sh = fit_shardings(params, step_mod.param_shardings(cfg, mesh))
+    if shape.kind == "prefill":
+        batch = step_mod.batch_specs(cfg, shape)
+        batch_sh = fit_shardings(batch,
+                                 step_mod.batch_shardings(cfg, shape, mesh))
+        return dict(kind="prefill", cfg=cfg, run=run,
+                    args=(params, batch),
+                    in_shardings=(params_sh, batch_sh),
+                    out_shardings=None, donate_argnums=())
+
+    # decode
+    cache = step_mod.cache_specs(cfg, shape, mesh)
+    cache_sh = fit_shardings(cache, step_mod.cache_shardings(cfg, mesh))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = fit_sharding(tokens, NamedSharding(
+        mesh, step_mod.resolve(("batch", None), mesh)))
+    return dict(kind="decode", cfg=cfg, run=run,
+                args=(params, cache, tokens),
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(None, cache_sh), donate_argnums=(1,))
+
+
+def step_fn_for(spec: Dict[str, Any], mesh: Mesh):
+    cfg, run = spec["cfg"], spec["run"]
+    if spec["kind"] == "train":
+        return step_mod.make_train_step(cfg, run, mesh)
+    if spec["kind"] == "prefill":
+        return step_mod.make_prefill_step(cfg, run, mesh)
+    return step_mod.make_serve_step(cfg, mesh)

@@ -1,0 +1,236 @@
+"""Attention primitives: GQA with physical head plans, RoPE, chunked
+(online-softmax "XLA-flash") attention, sliding-window attention and KV
+caches (full + ring buffer).
+
+Layout conventions
+  q:    (B, S, NKV, G, K)   NKV = physical kv heads, G = q-per-kv
+  k/v:  (B, T, NKV, K)
+All attention math runs in f32 and casts back to the input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, ..., K); positions: (B, S) int32."""
+    k = x.shape[-1]
+    half = k // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq      # (B,S,half)
+    # broadcast over head dims between S and K
+    extra = x.ndim - 3
+    ang = ang.reshape(ang.shape[:2] + (1,) * extra + (half,))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+PAD_SENTINEL = 2 ** 29
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(..., S, T) additive bias from positions (entries 0 or NEG_INF).
+    k positions >= PAD_SENTINEL (padding / unwritten cache slots) are
+    always masked, causal or not."""
+    ok = (k_pos < PAD_SENTINEL)[..., None, :]
+    ok = jnp.broadcast_to(ok, q_pos.shape[:-1] + (q_pos.shape[-1],
+                                                  k_pos.shape[-1]))
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        ok = ok & (d >= 0)
+    if window:
+        ok = ok & (d < window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ------------------------------------------------------- dense variant
+def dense_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                    scale=None):
+    """Reference/teeny-shape implementation. q:(B,S,N,G,K) k,v:(B,T,N,K)."""
+    B, S, N, G, K = q.shape
+    scale = scale or K ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bsngk,btnk->bngst", qf, k.astype(jnp.float32))
+    bias = _mask_bias(q_pos, k_pos, causal, window)            # (B,S,T)
+    logits = logits + bias[:, None, None]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,btnk->bsngk", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------- chunked (online softmax)
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                      q_chunk=512, kv_chunk=1024, scale=None):
+    """Flash-style attention in pure jnp: O(S*chunk) memory.
+
+    Outer scan over q chunks; inner scan over kv chunks carrying the
+    running (max, denom, acc). This is also the oracle the Pallas
+    flash-attention kernel is validated against.
+    """
+    B, S, N, G, K = q.shape
+    T = k.shape[1]
+    V = v.shape[-1]
+    scale = scale or K ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    # pad S and T to chunk multiples
+    s_pad, t_pad = (-S) % q_chunk, (-T) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, s_pad)), constant_values=-1)
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, t_pad)),
+                        constant_values=2**30)  # masked out by causal
+    Sp, Tp = q.shape[1], k.shape[1]
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+
+    qs = q.reshape(B, nq, q_chunk, N, G, K).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    ks = k.reshape(B, nk, kv_chunk, N, K).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, N, V).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_body(_, q_in):
+        qc, qp = q_in                                   # (B,C,N,G,K),(B,C)
+        qcf = qc.astype(jnp.float32) * scale
+
+        def kv_body(carry, kv_in):
+            acc, m, l = carry
+            kc, vc, kp = kv_in
+            logits = jnp.einsum("bsngk,btnk->bngst", qcf,
+                                kc.astype(jnp.float32))
+            bias = _mask_bias(qp, kp, causal, window)   # (B,C,Ck)
+            logits = logits + bias[:, None, None]
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngst,btnk->bngsk", p, vc.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, N, G, q_chunk, V), jnp.float32)
+        m0 = jnp.full((B, N, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, N, G, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_body, (acc0, m0, l0),
+                                      (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,N,G,C,K)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qps))     # (nq,B,C,N,G,V)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, N, G, V)
+    return out[:, :S]
+
+
+def local_attention(q, k, v, q_pos, k_pos, *, window, q_chunk=512,
+                    scale=None):
+    """Sliding-window attention: each q chunk slices only the kv range
+    it can see (window + chunk), so cost is O(S * window)."""
+    B, S, N, G, K = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    if S % q_chunk:
+        return chunked_attention(q, k, v, q_pos, k_pos, causal=True,
+                                 window=window, q_chunk=q_chunk,
+                                 scale=scale)
+    span = window + q_chunk
+    if span >= T:
+        return chunked_attention(q, k, v, q_pos, k_pos, causal=True,
+                                 window=window, q_chunk=q_chunk,
+                                 kv_chunk=min(1024, T), scale=scale)
+    nq = S // q_chunk
+    scale = scale or K ** -0.5
+
+    def body(_, i):
+        start = jnp.maximum(i * q_chunk + q_chunk - span, 0)
+        qc = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, 1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_chunk, q_chunk, 1)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, start, span, 1)
+        out = dense_attention(qc, kc, vc, qp, kp, causal=True,
+                              window=window, scale=scale)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, N, G, K)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal=True, window=0, impl="chunked",
+           q_chunk=512, kv_chunk=1024, scale=None):
+    if impl == "dense":
+        return dense_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, scale=scale)
+    if window and impl == "chunked":
+        return local_attention(q, k, v, q_pos, k_pos, window=window,
+                               q_chunk=q_chunk, scale=scale)
+    return chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                             window=window, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk, scale=scale)
+
+
+# ------------------------------------------------------------ KV cache
+# Cache pytree: {"k": (B,size,N,K), "v": (B,size,N,K), "pos": ()} --
+# ring-ness / window are STATIC properties passed to the functions (they
+# must not become traced leaves).
+def init_kv_cache(batch: int, max_len: int, n_kv: int, k_dim: int,
+                  dtype=jnp.bfloat16, ring: bool = False,
+                  window: int = 0) -> dict:
+    size = min(window, max_len) if (ring and window) else max_len
+    return {
+        "k": jnp.zeros((batch, size, n_kv, k_dim), dtype),
+        "v": jnp.zeros((batch, size, n_kv, k_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_update(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                 *, ring: bool = False) -> dict:
+    """Append one step (S_new=1) of k/v into the cache."""
+    pos = cache["pos"]
+    size = cache["k"].shape[1]
+    idx = (pos % size) if ring else jnp.minimum(pos, size - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            idx, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            idx, 1)
+    return dict(cache, k=k, v=v, pos=pos + 1)
+
+
+def cache_positions(cache: dict, *, ring: bool = False) -> jax.Array:
+    """Absolute positions of cache slots, shape (1, size); unwritten
+    slots get a huge position so causal masking hides them."""
+    size = cache["k"].shape[1]
+    pos = cache["pos"]
+    slots = jnp.arange(size)
+    if ring:
+        # slot i holds absolute position: largest p < pos with p%size==i
+        last = pos - 1
+        abs_pos = slots + ((last - slots) // size) * size
+        abs_pos = jnp.where(abs_pos > last, abs_pos - size, abs_pos)
+        abs_pos = jnp.where(abs_pos < 0, 2**30, abs_pos)
+    else:
+        abs_pos = jnp.where(slots < pos, slots, 2**30)
+    return abs_pos[None, :]
+
+
+def decode_attend(q, cache: dict, q_pos, *, ring=False, window=0,
+                  scale=None):
+    """Single-token attention against a cache. q: (B,1,N,G,K)."""
+    k_pos = jnp.broadcast_to(cache_positions(cache, ring=ring),
+                             (q.shape[0], cache["k"].shape[1]))
+    return dense_attention(q, cache["k"], cache["v"], q_pos, k_pos,
+                           causal=True, window=window, scale=scale)

@@ -1,0 +1,397 @@
+"""Composable layer blocks.
+
+Block types: attn, attn_moe, mla_moe, local_attn, attn_cross (decoder
+with cross-attention), enc_attn (non-causal encoder), rglru, mlstm,
+slstm. Each provides init / axes / apply / cache-init entries used by
+the backbone's scan-over-layers machinery.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as att
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.shardings import shard
+from repro.models.tp_padding import HeadPlan, plan_heads
+
+
+def rmsnorm(x, g, eps=1e-6):
+    """RMSNorm with f32 statistics but a bf16 (B,S,D) data path: the
+    full-rank f32 normalized tensor never exists as a primal, so GSPMD
+    collectives at block boundaries stay in bf16 (perf log: EXPERIMENTS
+    §Perf iteration 1 — halved all-gather/all-reduce traffic)."""
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return x * scale.astype(x.dtype) * g
+
+
+# ------------------------------------------------------------- dense MLP
+def init_mlp(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    nrm = lambda k, *s: (jax.random.normal(k, s) * (s[0] ** -0.5)).astype(dtype)
+    return {"w_gate": nrm(ks[0], d, f), "w_up": nrm(ks[1], d, f),
+            "w_down": nrm(ks[2], f, d)}
+
+
+MLP_AXES = {"w_gate": (None, "d_ff"), "w_up": (None, "d_ff"),
+            "w_down": ("d_ff", None)}
+
+
+def apply_mlp(p, x, mesh=None):
+    h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype) \
+        * (x @ p["w_up"])
+    h = shard(h, ("batch", None, "d_ff"), mesh)
+    out = h @ p["w_down"]
+    return shard(out, ("batch", "seq_sp", None), mesh)
+
+
+# -------------------------------------------------------- GQA attention
+def head_plan(cfg: ArchConfig, tp: int) -> HeadPlan:
+    return plan_heads(cfg.num_heads, cfg.num_kv_heads, tp)
+
+
+def init_attn(key, cfg: ArchConfig, tp: int, dtype) -> dict:
+    plan = head_plan(cfg, tp)
+    d, k = cfg.d_model, cfg.kq_dim
+    ks = jax.random.split(key, 4)
+    nrm = lambda kk, *s: (jax.random.normal(kk, s) * (s[0] ** -0.5)).astype(dtype)
+    # kv weights are initialized at the LOGICAL head count and gathered
+    # into physical slots via the plan, so replicated physical slots are
+    # exact ties — the model has exactly num_kv_heads distinct kv heads
+    # (faithful GQA) even when TP forces physical replication.
+    wk_l = nrm(ks[1], d, plan.n_kv, k)
+    wv_l = nrm(ks[2], d, plan.n_kv, k)
+    kv_map = list(plan.kv_slot_to_logical)
+    return {
+        "wq": nrm(ks[0], d, plan.n_q_phys, k),
+        "wk": wk_l[:, kv_map],
+        "wv": wv_l[:, kv_map],
+        "wo": nrm(ks[3], plan.n_q_phys, k, d),
+    }
+
+
+ATTN_AXES = {"wq": (None, "heads", None), "wk": (None, "kv_heads", None),
+             "wv": (None, "kv_heads", None), "wo": ("heads", None, None)}
+
+
+def _project_qkv(p, x, plan: HeadPlan, cfg, positions, mesh,
+                 rope_positions=True):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope_positions:
+        q = att.rope(q, positions, cfg.rope_theta)
+        k = att.rope(k, positions, cfg.rope_theta)
+    if plan.n_q_phys > plan.n_q:     # zero padded q slots (grad-safe)
+        mask = jnp.asarray(plan.q_mask, x.dtype)
+        q = q * mask[None, None, :, None]
+    q = shard(q, ("batch", None, "heads", None), mesh)
+    k = shard(k, ("batch", None, "kv_heads", None), mesh)
+    v = shard(v, ("batch", None, "kv_heads", None), mesh)
+    # regroup q: (B,S,NKV,G,K)
+    q = q.reshape(B, S, plan.n_kv_phys, plan.q_per_phys_kv, cfg.kq_dim)
+    return q, k, v
+
+
+def _attn_out(p, out, plan: HeadPlan, mesh, x_dtype):
+    B, S = out.shape[:2]
+    out = out.reshape(B, S, plan.n_q_phys, -1)
+    if plan.n_q_phys > plan.n_q:
+        out = out * jnp.asarray(plan.q_mask, out.dtype)[None, None, :, None]
+    out = shard(out, ("batch", None, "heads", None), mesh)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x_dtype), p["wo"])
+    return shard(y, ("batch", "seq_sp", None), mesh)
+
+
+def apply_attn(p, x, cfg: ArchConfig, tp: int, mesh=None, *,
+               positions, causal=True, window=0, impl="chunked",
+               kv_override=None):
+    plan = head_plan(cfg, tp)
+    q, k, v = _project_qkv(p, x, plan, cfg, positions, mesh)
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    else:
+        k_pos = positions
+    out = att.attend(q, k, v, positions, k_pos, causal=causal,
+                     window=window, impl=impl)
+    return _attn_out(p, out, plan, mesh, x.dtype)
+
+
+def decode_attn(p, x, cache, cfg: ArchConfig, tp: int, mesh=None, *,
+                window=0, ring=False):
+    plan = head_plan(cfg, tp)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache["pos"], (B, 1))
+    q, k, v = _project_qkv(p, x, plan, cfg, positions, mesh)
+    cache = att.cache_update(cache, k, v, ring=ring)
+    # q positions refer to the *pre-update* pos (cache now holds it)
+    out = att.decode_attend(q, cache, positions, ring=ring, window=window)
+    return _attn_out(p, out, plan, mesh, x.dtype), cache
+
+
+# ----------------------------------------------------------- block API
+def init_block(key, btype: str, cfg: ArchConfig, tp: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    if btype in ("attn", "local_attn", "enc_attn"):
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attn(k1, cfg, tp, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+    if btype == "attn_moe":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attn(k1, cfg, tp, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "moe": moe_mod.init_moe(k2, cfg, tp, dtype)}
+    if btype == "mla_moe":
+        return {"ln1": jnp.ones((d,), dtype),
+                "mla": mla_mod.init_mla(k1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "moe": moe_mod.init_moe(k2, cfg, tp, dtype)}
+    if btype == "attn_cross":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attn(k1, cfg, tp, dtype),
+                "lnx": jnp.ones((d,), dtype),
+                "xattn": init_attn(k2, cfg, tp, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": init_mlp(k3, d, cfg.d_ff, dtype)}
+    if btype == "rglru":
+        return {"ln1": jnp.ones((d,), dtype),
+                "rnn": rglru_mod.init_rglru(k1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+    if btype == "mlstm":
+        return {"ln1": jnp.ones((d,), dtype),
+                "cell": xlstm_mod.init_mlstm(k1, cfg, dtype)}
+    if btype == "slstm":
+        return {"ln1": jnp.ones((d,), dtype),
+                "cell": xlstm_mod.init_slstm(k1, cfg, dtype)}
+    raise ValueError(btype)
+
+
+def block_axes(btype: str, cfg: ArchConfig) -> dict:
+    ln = ((None,),)
+    if btype in ("attn", "local_attn", "enc_attn"):
+        return {"ln1": (None,), "attn": dict(ATTN_AXES),
+                "ln2": (None,), "mlp": dict(MLP_AXES)}
+    if btype == "attn_moe":
+        return {"ln1": (None,), "attn": dict(ATTN_AXES),
+                "ln2": (None,), "moe": moe_mod.moe_axes(cfg)}
+    if btype == "mla_moe":
+        return {"ln1": (None,), "mla": mla_mod.mla_axes(cfg),
+                "ln2": (None,), "moe": moe_mod.moe_axes(cfg)}
+    if btype == "attn_cross":
+        return {"ln1": (None,), "attn": dict(ATTN_AXES),
+                "lnx": (None,), "xattn": dict(ATTN_AXES),
+                "ln2": (None,), "mlp": dict(MLP_AXES)}
+    if btype == "rglru":
+        return {"ln1": (None,), "rnn": rglru_mod.rglru_axes(cfg),
+                "ln2": (None,), "mlp": dict(MLP_AXES)}
+    if btype == "mlstm":
+        return {"ln1": (None,), "cell": xlstm_mod.mlstm_axes(cfg)}
+    if btype == "slstm":
+        return {"ln1": (None,), "cell": xlstm_mod.slstm_axes(cfg)}
+    raise ValueError(btype)
+
+
+def apply_block(btype: str, p: dict, x, cfg: ArchConfig, tp: int,
+                mesh=None, *, positions=None, impl="chunked",
+                enc_out=None, enc_positions=None):
+    """Training/prefill path. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    # Explicit bf16 gather point: the residual is sequence-sharded (SP);
+    # pinning the full layout on the *bf16* normalized tensor keeps the
+    # SP all-gather (fwd) / reduce-scatter (bwd) in bf16 instead of the
+    # f32 the CPU/accum-upcast would otherwise gather (EXPERIMENTS
+    # §Perf iteration 2).
+    gather = lambda t: shard(t, ("batch", None, None), mesh)
+    if btype in ("attn", "attn_moe", "local_attn", "enc_attn"):
+        window = cfg.attention_window if btype == "local_attn" else 0
+        causal = btype != "enc_attn"
+        h = apply_attn(p["attn"],
+                       gather(rmsnorm(x, p["ln1"], cfg.norm_eps)), cfg,
+                       tp, mesh, positions=positions, causal=causal,
+                       window=window, impl=impl)
+        x = x + h
+        h2 = gather(rmsnorm(x, p["ln2"], cfg.norm_eps))
+        if btype == "attn_moe":
+            y, aux = moe_mod.apply_moe(p["moe"], h2, cfg, mesh)
+        else:
+            y = apply_mlp(p["mlp"], h2, mesh)
+        return x + y, aux
+    if btype == "mla_moe":
+        h = mla_mod.apply_mla(p["mla"],
+                              gather(rmsnorm(x, p["ln1"], cfg.norm_eps)),
+                              positions, cfg, mesh, impl=impl)
+        x = x + h
+        y, aux = moe_mod.apply_moe(
+            p["moe"], gather(rmsnorm(x, p["ln2"], cfg.norm_eps)), cfg,
+            mesh)
+        return x + y, aux
+    if btype == "attn_cross":
+        h = apply_attn(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                       tp, mesh, positions=positions, causal=True,
+                       impl=impl)
+        x = x + h
+        plan = head_plan(cfg, tp)
+        hx_in = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        hx = apply_attn(p["xattn"], hx_in, cfg, tp, mesh,
+                        positions=positions, causal=False, impl="dense",
+                        kv_override=(kx, vx, enc_positions))
+        x = x + hx
+        y = apply_mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), mesh)
+        return x + y, aux
+    if btype == "rglru":
+        h, _ = rglru_mod.apply_rglru(p["rnn"],
+                                     rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                     cfg, mesh)
+        x = x + h
+        y = apply_mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), mesh)
+        return x + y, aux
+    if btype == "mlstm":
+        h, _ = xlstm_mod.apply_mlstm(p["cell"],
+                                     rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                     cfg, mesh)
+        return x + h, aux
+    if btype == "slstm":
+        h, _ = xlstm_mod.apply_slstm(p["cell"],
+                                     rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                     cfg, mesh)
+        return x + h, aux
+    raise ValueError(btype)
+
+
+def init_block_cache(btype: str, cfg: ArchConfig, batch: int, max_len: int,
+                     tp: int, dtype=jnp.bfloat16):
+    plan = head_plan(cfg, tp)
+    if btype in ("attn", "attn_moe"):
+        return att.init_kv_cache(batch, max_len, plan.n_kv_phys,
+                                 cfg.kq_dim, dtype)
+    if btype == "local_attn":
+        return att.init_kv_cache(batch, max_len, plan.n_kv_phys,
+                                 cfg.kq_dim, dtype, ring=True,
+                                 window=cfg.attention_window)
+    if btype == "mla_moe":
+        return mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+    if btype == "attn_cross":
+        enc_s = cfg.encoder_seq
+        return {
+            "self": att.init_kv_cache(batch, max_len, plan.n_kv_phys,
+                                      cfg.kq_dim, dtype),
+            "cross_k": jnp.zeros((batch, enc_s, plan.n_kv_phys,
+                                  cfg.kq_dim), dtype),
+            "cross_v": jnp.zeros((batch, enc_s, plan.n_kv_phys,
+                                  cfg.kq_dim), dtype),
+        }
+    if btype == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if btype == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if btype == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def block_cache_axes(btype: str, cfg: ArchConfig) -> dict:
+    """Logical sharding axes mirroring init_block_cache's structure."""
+    from repro.models.shardings import SCALAR
+    kv = {"k": ("batch", None, "kv_heads", None),
+          "v": ("batch", None, "kv_heads", None), "pos": SCALAR}
+    if btype in ("attn", "attn_moe", "local_attn"):
+        return dict(kv)
+    if btype == "mla_moe":
+        return {"ckv": ("batch", None, None),
+                "k_rope": ("batch", None, None), "pos": SCALAR}
+    if btype == "attn_cross":
+        return {"self": dict(kv),
+                "cross_k": ("batch", None, "kv_heads", None),
+                "cross_v": ("batch", None, "kv_heads", None)}
+    if btype == "rglru":
+        return {"h": ("batch", "d_ff"), "conv": ("batch", None, "d_ff")}
+    if btype == "mlstm":
+        return {"C": ("batch", None, None, "d_ff"),
+                "n": ("batch", None, "d_ff"), "m": ("batch", None),
+                "conv": ("batch", None, "d_ff")}
+    if btype == "slstm":
+        return {"h": ("batch", None, None), "c": ("batch", None, None),
+                "n": ("batch", None, None), "m": ("batch", None, None)}
+    raise ValueError(btype)
+
+
+def decode_block(btype: str, p: dict, x, cache, cfg: ArchConfig, tp: int,
+                 mesh=None):
+    """Single-token decode. x: (B,1,D). Returns (x, new_cache)."""
+    if btype in ("attn", "attn_moe"):
+        h, cache = decode_attn(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                               cache, cfg, tp, mesh)
+        x = x + h
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if btype == "attn_moe":
+            y = moe_mod.decode_moe(p["moe"], h2, cfg, mesh)
+        else:
+            y = apply_mlp(p["mlp"], h2, mesh)
+        return x + y, cache
+    if btype == "local_attn":
+        h, cache = decode_attn(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                               cache, cfg, tp, mesh,
+                               window=cfg.attention_window, ring=True)
+        x = x + h
+        y = apply_mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), mesh)
+        return x + y, cache
+    if btype == "mla_moe":
+        h, cache = mla_mod.decode_mla(p["mla"],
+                                      rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                      cache, cfg, mesh)
+        x = x + h
+        y = moe_mod.decode_moe(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps),
+                               cfg, mesh)
+        return x + y, cache
+    if btype == "attn_cross":
+        h, self_c = decode_attn(p["attn"],
+                                rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                cache["self"], cfg, tp, mesh)
+        cache = dict(cache, self=self_c)
+        x = x + h
+        plan = head_plan(cfg, tp)
+        hx_in = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(self_c["pos"] - 1, (B, 1))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(cache["cross_k"].shape[1])[None],
+            (B, cache["cross_k"].shape[1]))
+        hx = apply_attn(p["xattn"], hx_in, cfg, tp, mesh,
+                        positions=positions, causal=False, impl="dense",
+                        kv_override=(cache["cross_k"], cache["cross_v"],
+                                     enc_pos))
+        x = x + hx
+        y = apply_mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), mesh)
+        return x + y, cache
+    if btype == "rglru":
+        h, cache = rglru_mod.apply_rglru(
+            p["rnn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, mesh,
+            state=cache)
+        x = x + h
+        y = apply_mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), mesh)
+        return x + y, cache
+    if btype == "mlstm":
+        h, cache = xlstm_mod.apply_mlstm(
+            p["cell"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, mesh,
+            state=cache)
+        return x + h, cache
+    if btype == "slstm":
+        h, cache = xlstm_mod.apply_slstm(
+            p["cell"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, mesh,
+            state=cache)
+        return x + h, cache
+    raise ValueError(btype)

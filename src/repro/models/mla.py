@@ -1,0 +1,153 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed decode path.
+
+Prefill/train: decompress the latent kv and run normal attention.
+Decode: cache only (c_kv, k_rope) per position — the MLA selling point —
+and absorb W_uk / W_uv into the query/output projections.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as att
+from repro.models.shardings import shard
+
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    nrm = lambda k, *s: (jax.random.normal(k, s, dtype)
+                         * (s[0] ** -0.5)).astype(dtype)
+    p = {
+        "w_dkv": nrm(ks[0], d, m.kv_lora_rank + m.qk_rope_dim),
+        "kv_ln": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": nrm(ks[1], m.kv_lora_rank, h, m.qk_nope_dim),
+        "w_uv": nrm(ks[2], m.kv_lora_rank, h, m.v_head_dim),
+        "w_o": nrm(ks[4], h, m.v_head_dim, d),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = nrm(ks[3], d, m.q_lora_rank)
+        p["q_ln"] = jnp.ones((m.q_lora_rank,), dtype)
+        p["w_uq"] = nrm(ks[5], m.q_lora_rank, h, qd)
+    else:
+        p["w_q"] = nrm(ks[3], d, h, qd)
+    return p
+
+
+def mla_axes(cfg: ArchConfig) -> dict:
+    a = {
+        "w_dkv": (None, None),
+        "kv_ln": (None,),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "w_o": ("heads", None, None),
+    }
+    if cfg.mla.q_lora_rank:
+        a.update(w_dq=(None, None), q_ln=(None,),
+                 w_uq=(None, "heads", None))
+    else:
+        a["w_q"] = (None, "heads", None)
+    return a
+
+
+def _rmsnorm(x, g, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            ).astype(x.dtype) * g
+
+
+def _queries(p, x, positions, m, theta):
+    if "w_dq" in p:
+        q = _rmsnorm(x @ p["w_dq"], p["q_ln"])
+        q = jnp.einsum("bsr,rhk->bshk", q, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = att.rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def apply_mla(p: dict, x: jax.Array, positions, cfg: ArchConfig,
+              mesh=None, impl="chunked") -> jax.Array:
+    """Train/prefill path. x: (B,S,D)."""
+    m = cfg.mla
+    B, S, D = x.shape
+    q_nope, q_rope = _queries(p, x, positions, m, cfg.rope_theta)
+    ckv = x @ p["w_dkv"]
+    c_kv = _rmsnorm(ckv[..., :m.kv_lora_rank], p["kv_ln"])
+    k_rope = att.rope(ckv[..., None, m.kv_lora_rank:], positions,
+                      cfg.rope_theta)                     # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    k_rope_b = jnp.broadcast_to(k_rope,
+                                (B, S, cfg.num_heads, m.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    q = shard(q, ("batch", None, "heads", None), mesh)
+    k = shard(k, ("batch", None, "heads", None), mesh)
+    v = shard(v, ("batch", None, "heads", None), mesh)
+    # MLA is MHA (one kv per q head): N=h, G=1 layout.
+    qh = q[:, :, :, None, :]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out = att.attend(qh, k, v, positions, positions, causal=True,
+                     impl=impl, scale=scale)[:, :, :, 0, :]
+    out = shard(out, ("batch", None, "heads", None), mesh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return shard(y, ("batch", "seq_sp", None), mesh)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_mla(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
+               mesh=None) -> Tuple[jax.Array, dict]:
+    """Absorbed decode: score against the latent cache directly.
+    x: (B,1,D)."""
+    m = cfg.mla
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope = _queries(p, x, positions, m, cfg.rope_theta)
+
+    ckv_new = x @ p["w_dkv"]
+    c_kv_new = _rmsnorm(ckv_new[..., :m.kv_lora_rank], p["kv_ln"])
+    k_rope_new = att.rope(ckv_new[..., None, m.kv_lora_rank:], positions,
+                          cfg.rope_theta)[:, :, 0, :]
+    cache = dict(
+        cache,
+        ckv=jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_kv_new.astype(cache["ckv"].dtype), pos, 1),
+        k_rope=jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            pos, 1),
+        pos=pos + 1,
+    )
+    # absorb W_uk:  q_lat = q_nope @ W_uk  -> score vs c_kv directly
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    logits = jnp.einsum("bshr,btr->bhst", q_lat,
+                        cache["ckv"].astype(jnp.float32))
+    logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         cache["k_rope"].astype(jnp.float32))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    T = cache["ckv"].shape[1]
+    valid = jnp.arange(T)[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits * scale, att.NEG_INF)
+    pr = jax.nn.softmax(logits, -1)
+    o_lat = jnp.einsum("bhst,btr->bshr", pr,
+                       cache["ckv"].astype(jnp.float32))   # (B,1,h,R)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat,
+                     p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return shard(y, ("batch", None, None), mesh), cache

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (expert-parallel).
+
+Physical expert count is padded up to a multiple of the EP axis; padded
+experts are masked out of routing. Shared (always-on) experts are fused
+into one dense MLP of width num_shared * d_expert.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.models.shardings import shard
+
+
+def phys_experts(moe: MoECfg, ep: int) -> int:
+    return -(-moe.num_experts // ep) * ep
+
+
+def init_moe(key, cfg: ArchConfig, ep: int, dtype=jnp.bfloat16) -> dict:
+    moe = cfg.moe
+    d, de = cfg.d_model, (moe.d_expert or cfg.d_ff)
+    e = phys_experts(moe, ep)
+    ks = jax.random.split(key, 6)
+    lim = lambda *s: (6.0 / sum(s[:2])) ** 0.5
+    u = lambda k, *s: jax.random.uniform(k, s, dtype, -lim(*s), lim(*s))
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02,
+        "w_gate": u(ks[1], d, de, e).transpose(2, 0, 1),   # (E, D, de)
+        "w_up":   u(ks[2], d, de, e).transpose(2, 0, 1),
+        "w_down": u(ks[3], de, d, e).transpose(2, 0, 1),   # (E, de, D)
+    }
+    if moe.num_shared:
+        ds = moe.num_shared * de
+        p["ws_gate"] = u(ks[4], d, ds)
+        p["ws_up"] = u(ks[5], d, ds)
+        p["ws_down"] = u(ks[4], ds, d)
+    return p
+
+
+def moe_axes(cfg: ArchConfig) -> dict:
+    a = {
+        "router": (None, "experts"),
+        "w_gate": ("experts", None, None),
+        "w_up": ("experts", None, None),
+        "w_down": ("experts", None, None),
+    }
+    if cfg.moe.num_shared:
+        a.update(ws_gate=(None, "d_ff"), ws_up=(None, "d_ff"),
+                 ws_down=("d_ff", None))
+    return a
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig, mesh=None,
+              capacity: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Capacity-based top-k dispatch (Switch/Mixtral style):
+      dispatch one-hot (B,S,E,C) routes tokens into per-expert buffers
+      of C slots per batch row; overflow tokens are dropped (their
+      residual path carries them).
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    k = moe.top_k
+    if capacity is None:
+        capacity = max(4, int(math.ceil(S * k / moe.num_experts
+                                        * moe.capacity_factor)))
+    xf = x.astype(jnp.float32)
+    logits = xf @ p["router"]                               # (B,S,E)
+    logits = shard(logits, ("batch", None, None), mesh)
+    if E > moe.num_experts:                                 # mask padding
+        pad = jnp.arange(E) >= moe.num_experts
+        logits = jnp.where(pad, -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    probs = shard(probs, ("batch", None, None), mesh)
+    gate_vals, idx = jax.lax.top_k(probs, k)                # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (B,S,k,E)
+    onehot = shard(onehot, ("batch", None, None, None), mesh)
+    # position of each (token, expert-choice) in that expert's buffer
+    flat = onehot.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                    # (B,S*k,E)
+    pos = shard(pos, ("batch", None, None), mesh)
+    pos = pos.reshape(B, S, k, E)
+    keep = (pos < capacity) & (onehot > 0)
+    oh_keep = onehot * keep.astype(jnp.float32)             # (B,S,k,E)
+    pos_sel = jnp.sum(pos * oh_keep, axis=-1)               # (B,S,k)
+    slot = jax.nn.one_hot(pos_sel, capacity,
+                          dtype=jnp.float32)                # (B,S,k,C)
+    slot = slot * keep.any(-1, keepdims=True)
+    dispatch = jnp.einsum("bske,bskc->bsec", oh_keep, slot)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, oh_keep, slot)
+    dispatch = shard(dispatch, ("batch", None, "experts", None), mesh)
+    combine = shard(combine, ("batch", None, "experts", None), mesh)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)
+    xin = shard(xin, ("experts", "batch", None, None), mesh)
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"]))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"])
+    h = shard(h, ("experts", "batch", None, None), mesh)
+    out = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"])
+    y = jnp.einsum("ebcd,bsec->bsd", out, combine.astype(x.dtype))
+
+    if moe.num_shared:
+        hs = jax.nn.silu(xf.astype(x.dtype) @ p["ws_gate"]) * (x @ p["ws_up"])
+        hs = shard(hs, ("batch", None, "d_ff"), mesh)
+        y = y + hs @ p["ws_down"]
+    y = shard(y, ("batch", "seq_sp", None), mesh)
+
+    # Switch-style load-balance auxiliary loss over live experts.
+    me = probs[..., :moe.num_experts].mean((0, 1))
+    ce = onehot[..., :moe.num_experts].sum(2).mean((0, 1))
+    aux = moe.num_experts * jnp.sum(me * ce) * moe.router_aux_weight
+    return y.astype(x.dtype), aux
+
+
+def decode_moe(p: dict, x: jax.Array, cfg: ArchConfig, mesh=None):
+    """Decode-path MoE (S small): dense-gather formulation — compute
+    every expert on the tiny token set is cheaper than dispatch.
+    x: (B, 1, D)."""
+    moe = cfg.moe
+    E = p["router"].shape[1]
+    xf = x.astype(jnp.float32)
+    logits = xf @ p["router"]
+    if E > moe.num_experts:
+        logits = jnp.where(jnp.arange(E) >= moe.num_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(probs, moe.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    w = jnp.einsum("bsk,bske->bse", gate_vals,
+                   jax.nn.one_hot(idx, E, dtype=jnp.float32))
+    # keep every intermediate expert-sharded: without these constraints
+    # GSPMD all-gathers the stacked expert weights (gigabytes) on the
+    # decode path (EXPERIMENTS §Perf deepseek decode iteration).
+    es = lambda t: shard(t, ("experts", "batch", None, None), mesh)
+    h = es(jax.nn.silu(jnp.einsum("bsd,edf->ebsf", x, p["w_gate"])))
+    h = h * es(jnp.einsum("bsd,edf->ebsf", x, p["w_up"]))
+    out = es(jnp.einsum("ebsf,efd->ebsd", h, p["w_down"]))
+    y = jnp.einsum("ebsd,bse->bsd", out, w.astype(x.dtype))
+    if moe.num_shared:
+        y = y + (jax.nn.silu(x @ p["ws_gate"]) * (x @ p["ws_up"])) @ p["ws_down"]
+    return y.astype(x.dtype)

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing:   conv1d(width w) -> RG-LRU gated linear recurrence
+  r_t = sigmoid(x_t W_a + b_a)            recurrence gate
+  i_t = sigmoid(x_t W_x + b_x)            input gate
+  log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Training uses jax.lax.associative_scan over the sequence; decode is the
+O(1) single-step update. The Pallas kernel (kernels/rglru_scan.py)
+implements the blocked scan for TPU; this module is its oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.shardings import shard
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dr = cfg.rnn_state_dim or cfg.d_model
+    w = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    nrm = lambda k, *s: (jax.random.normal(k, s) * (s[0] ** -0.5)).astype(dtype)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))           # softplus^-1
+    return {
+        "w_in_x": nrm(ks[1], d, dr),       # recurrence branch input
+        "w_in_g": nrm(ks[2], d, dr),       # multiplicative gate branch
+        "conv_w": nrm(ks[3], w, dr) * 0.1,
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": nrm(ks[4], dr, dr) * 0.1,
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": nrm(ks[5], dr, dr) * 0.1,
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "w_out": nrm(ks[6], dr, d),
+    }
+
+
+def rglru_axes(cfg: ArchConfig) -> dict:
+    return {
+        "w_in_x": (None, "d_ff"), "w_in_g": (None, "d_ff"),
+        "conv_w": (None, "d_ff"), "conv_b": ("d_ff",),
+        "w_a": (None, "d_ff"), "b_a": ("d_ff",),
+        "w_x": (None, "d_ff"), "b_x": ("d_ff",),
+        "lam": ("d_ff",),
+        "w_out": ("d_ff", None),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b, state: Optional[jax.Array]):
+    """Causal depthwise conv. x: (B,S,Dr), w: (W,Dr).
+    state: (B, W-1, Dr) trailing context (decode) or None (train)."""
+    W = w.shape[0]
+    if state is None:
+        ctx = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        ctx = state.astype(x.dtype)
+    xp = jnp.concatenate([ctx, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else ctx
+    return out + b, new_state
+
+
+def _gates(p, xr):
+    """Gate computations in f32. xr: (B,S,Dr)."""
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,Dr) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xf)
+    return a, gated
+
+
+def rglru_scan(a: jax.Array, x: jax.Array, h0: Optional[jax.Array] = None):
+    """h_t = a_t h_{t-1} + x_t along axis 1 via associative scan."""
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def apply_rglru(p: dict, x: jax.Array, cfg: ArchConfig, mesh=None,
+                state: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,D) -> (B,S,D). state (decode): {"h": (B,Dr), "conv": ...}."""
+    xr = x @ p["w_in_x"]
+    gate = x @ p["w_in_g"]
+    xr = shard(xr, ("batch", None, "d_ff"), mesh)
+    conv_state = None if state is None else state["conv"]
+    xr, new_conv = _conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    a, gated = _gates(p, xr)
+    if state is None:
+        h = rglru_scan(a, gated)
+        new_state = None
+    else:
+        h = a * state["h"][:, None] + gated              # S == 1
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    y = (jax.nn.gelu(gate.astype(jnp.float32)) * h).astype(x.dtype)
+    y = shard(y, ("batch", None, "d_ff"), mesh)
+    out = y @ p["w_out"]
+    return shard(out, ("batch", "seq_sp", None), mesh), new_state
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    dr = cfg.rnn_state_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+    }

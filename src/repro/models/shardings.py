@@ -1,0 +1,84 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Models annotate tensors with *logical* axis names; the rules below map
+them onto whatever production mesh is active ((data, model) single-pod
+or (pod, data, model) multi-pod). ``None`` means replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> tuple of mesh axis names it wants (first match wins on
+# presence in the mesh).
+RULES = {
+    "batch":   ("pod", "data"),   # data parallel (pod folds into DP)
+    "seq_sp":  ("model",),        # sequence-parallel residual stream
+    "seq":     (),                # unsharded sequence
+    "heads":   ("model",),        # tensor parallel attention heads
+    "kv_heads": ("model",),
+    "d_ff":    ("model",),        # tensor parallel MLP hidden
+    "vocab":   ("model",),        # tensor parallel embedding/logits
+    "experts": ("model",),        # expert parallel
+    "d_model": (),                # replicated model dim
+    "fsdp":    ("data",),         # ZeRO param/optimizer sharding axis
+    "null":    (),
+}
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+SCALAR = ("@scalar",)     # sharding-axes marker for 0-dim leaves
+
+
+def resolve(logical: Sequence[Optional[str]], mesh: Mesh,
+            extra_rules: Optional[dict] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for `mesh`."""
+    if tuple(logical) == SCALAR:
+        return P()
+    rules = dict(RULES)
+    if extra_rules:
+        rules.update(extra_rules)
+    present = set(mesh.axis_names)
+    spec, used = [], set()
+    for name in logical:
+        if name is None:
+            spec.append(None)
+            continue
+        want = [a for a in rules[name] if a in present and a not in used]
+        if not want:
+            spec.append(None)
+        elif len(want) == 1:
+            used.add(want[0])
+            spec.append(want[0])
+        else:
+            used.update(want)
+            spec.append(tuple(want))
+    return P(*spec)
+
+
+def logical_sharding(logical: Sequence[Optional[str]],
+                     mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve(logical, mesh))
+
+
+def shard(x, logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if mesh is None or mesh.empty or len(mesh.devices.flatten()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_sharding(logical, mesh))
+
+
+def axis_size(mesh: Optional[Mesh], logical_name: str) -> int:
+    """Product of mesh axis sizes a logical axis maps to (1 w/o mesh)."""
+    if mesh is None or mesh.empty:
+        return 1
+    present = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in RULES[logical_name]:
+        n *= present.get(a, 1)
+    return n

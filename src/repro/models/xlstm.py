@@ -1,0 +1,281 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) and
+sequential sLSTM (scalar memory with recurrent weights).
+
+The chunkwise mLSTM here is the exact stabilized form (running log-max
+stabilizer carried across chunks) and doubles as the oracle for the
+Pallas kernel in kernels/mlstm.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.shardings import shard
+
+NEG = -1e30
+
+
+# =============================================================== mLSTM
+def init_mlstm(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    inner = 2 * d
+    dh = inner // h
+    ks = jax.random.split(key, 10)
+    nrm = lambda k, *s: (jax.random.normal(k, s) * (s[0] ** -0.5)).astype(dtype)
+    return {
+        "w_up": nrm(ks[0], d, 2 * inner),          # (x_m, z) branches
+        "conv_w": nrm(ks[1], cfg.conv_width, inner) * 0.1,
+        "conv_b": jnp.zeros((inner,), dtype),
+        "w_q": nrm(ks[2], inner, h, dh),
+        "w_k": nrm(ks[3], inner, h, dh),
+        "w_v": nrm(ks[4], inner, h, dh),
+        "w_i": jax.random.normal(ks[5], (inner, h), jnp.float32) * 0.01,
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": jax.random.normal(ks[6], (inner, h), jnp.float32) * 0.01,
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates
+        "skip": jnp.ones((inner,), dtype),
+        "ogate_ln": jnp.ones((inner,), dtype),
+        "w_down": nrm(ks[7], inner, d),
+    }
+
+
+def mlstm_axes(cfg: ArchConfig) -> dict:
+    return {
+        "w_up": (None, "d_ff"), "conv_w": (None, "d_ff"),
+        "conv_b": ("d_ff",),
+        "w_q": ("d_ff", None, None), "w_k": ("d_ff", None, None),
+        "w_v": ("d_ff", None, None),
+        "w_i": ("d_ff", None), "b_i": (None,),
+        "w_f": ("d_ff", None), "b_f": (None,),
+        "skip": ("d_ff",), "ogate_ln": ("d_ff",),
+        "w_down": ("d_ff", None),
+    }
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int = 64):
+    """Exact stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,S,K) f32; log_i/log_f: (B,H,S) f32.
+    state: (C (B,H,K,K), n (B,H,K), m (B,H)) or None.
+    Returns h: (B,H,S,K), new state.
+    """
+    B, H, S, K = q.shape
+    scale = K ** -0.5
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=NEG)
+        log_f = zf(log_f)
+    Sp = q.shape[2]
+    nc = Sp // chunk
+    rs = lambda x: x.reshape(B, H, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+    rg = lambda x: x.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    qs, ks_, vs = rs(q), rs(k), rs(v)
+    lis, lfs = rg(log_i), rg(log_f)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, K, K), jnp.float32)
+        n0 = jnp.zeros((B, H, K), jnp.float32)
+        m0 = jnp.full((B, H), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, li, lf = xs                  # (B,H,L,K) / (B,H,L)
+        F = jnp.cumsum(lf, axis=-1)              # inclusive
+        # intra log-weights W[t,s] = F_t - F_s + li_s  (s <= t)
+        W = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        W = jnp.where(tri, W, NEG)
+        g_inter = m[..., None] + F               # (B,H,L)
+        m_loc = jnp.maximum(g_inter, W.max(-1))  # (B,H,L)
+        D = jnp.exp(W - m_loc[..., None])
+        c_int = jnp.exp(g_inter - m_loc)
+        qk = jnp.einsum("bhtk,bhsk->bhts", qc, kc) * scale
+        num = c_int[..., None] * jnp.einsum("bhtk,bhkv->bhtv", qc * scale, C) \
+            + jnp.einsum("bhts,bhsv->bhtv", D * qk, vc)
+        den = c_int * jnp.einsum("bhtk,bhk->bht", qc * scale, n) \
+            + jnp.einsum("bhts,bhts->bht", D, qk)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))[..., None]
+        # advance carry to chunk end
+        Ftot = F[..., -1]
+        scale_s = li + Ftot[..., None] - F       # log weight of each s
+        m_new = jnp.maximum(m + Ftot, scale_s.max(-1))
+        w_s = jnp.exp(scale_s - m_new[..., None])
+        C_new = jnp.exp(m + Ftot - m_new)[..., None, None] * C \
+            + jnp.einsum("bhs,bhsk,bhsv->bhkv", w_s, kc, vc)
+        n_new = jnp.exp(m + Ftot - m_new)[..., None] * n \
+            + jnp.einsum("bhs,bhsk->bhk", w_s, kc)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks_, vs, lis, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sp, K)[:, :, :S]
+    return h, (C, n, m)
+
+
+def _conv_silu(x, w, b, state):
+    W = w.shape[0]
+    if state is None:
+        ctx = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        ctx = state.astype(x.dtype)
+    xp = jnp.concatenate([ctx, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b), xp[:, -(W - 1):]
+
+
+def apply_mlstm(p: dict, x: jax.Array, cfg: ArchConfig, mesh=None,
+                state: Optional[dict] = None, chunk: int = 64
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,D). state (decode): {"C","n","m","conv"}."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    up = x @ p["w_up"]
+    inner = up.shape[-1] // 2
+    xm, z = up[..., :inner], up[..., inner:]
+    xm = shard(xm, ("batch", None, "d_ff"), mesh)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _conv_silu(xm, p["conv_w"], p["conv_b"], conv_state)
+    to_heads = lambda w: jnp.einsum("bsi,ihk->bhsk",
+                                    xc.astype(jnp.float32),
+                                    w.astype(jnp.float32))
+    q, k_, v = to_heads(p["w_q"]), to_heads(p["w_k"]), to_heads(p["w_v"])
+    xcf = xc.astype(jnp.float32)
+    log_i = (xcf @ p["w_i"] + p["b_i"]).transpose(0, 2, 1)     # (B,H,S)
+    log_f = jax.nn.log_sigmoid(
+        (xcf @ p["w_f"] + p["b_f"])).transpose(0, 2, 1)
+    cell_state = None if state is None else (state["C"], state["n"],
+                                             state["m"])
+    h, (C, n, m) = mlstm_chunkwise(q, k_, v, log_i, log_f, cell_state,
+                                   chunk=min(chunk, S))
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(x.dtype)
+    h = _groupnorm(h, H) * p["ogate_ln"] + xc * p["skip"]
+    y = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    y = shard(y, ("batch", None, "d_ff"), mesh)
+    out = y @ p["w_down"]
+    out = shard(out, ("batch", "seq_sp", None), mesh)
+    new_state = None
+    if state is not None:
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return out, new_state
+
+
+def _groupnorm(x, groups, eps=1e-6):
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32).reshape(B, S, groups, D // groups)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, D) \
+        .astype(x.dtype)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    inner = 2 * cfg.d_model
+    dh = inner // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), NEG, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), jnp.float32),
+    }
+
+
+# =============================================================== sLSTM
+def init_slstm(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    nrm = lambda k, *s: (jax.random.normal(k, s) * (s[0] ** -0.5)).astype(dtype)
+    ff = max(2 * d // 2, d)  # proj factor ~4/3 GeGLU rounded up
+    return {
+        # input projections for 4 gates: z, i, f, o
+        "w_zifo": nrm(ks[0], d, 4, h, dh).astype(jnp.float32),
+        # per-head recurrent block-diagonal weights
+        "r_zifo": (jax.random.normal(ks[1], (4, h, dh, dh)) *
+                   dh ** -0.5).astype(jnp.float32) * 0.1,
+        "b_zifo": jnp.zeros((4, h, dh), jnp.float32)
+        .at[2].set(3.0),                       # forget bias open
+        "gn": jnp.ones((d,), dtype),
+        "w_ff1": nrm(ks[2], d, ff), "w_ff2": nrm(ks[3], d, ff),
+        "w_ff3": nrm(ks[4], ff, d),
+    }
+
+
+def slstm_axes(cfg: ArchConfig) -> dict:
+    return {
+        "w_zifo": (None, None, None, None),
+        "r_zifo": (None, None, None, None),
+        "b_zifo": (None, None, None),
+        "gn": (None,),
+        "w_ff1": (None, "d_ff"), "w_ff2": (None, "d_ff"),
+        "w_ff3": ("d_ff", None),
+    }
+
+
+def _slstm_step(p, carry, x_t):
+    """carry: (h, c, n, m) each (B,H,Dh); x_t: (B,D) f32."""
+    h, c, n, m = carry
+    B = x_t.shape[0]
+    Hh, Dh = h.shape[1], h.shape[2]
+    zin = jnp.einsum("bd,dghk->bghk", x_t, p["w_zifo"]) \
+        + jnp.einsum("bhk,ghkl->bghl", h, p["r_zifo"]) + p["b_zifo"]
+    z_t = jnp.tanh(zin[:, 0])
+    i_t = zin[:, 1]
+    f_t = jax.nn.log_sigmoid(zin[:, 2])
+    o_t = jax.nn.sigmoid(zin[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + m - m_new)
+    c_new = fp * c + ip * z_t
+    n_new = fp * n + ip
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def apply_slstm(p: dict, x: jax.Array, cfg: ArchConfig, mesh=None,
+                state: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Dh = D // H
+    if state is None:
+        z = jnp.zeros((B, H, Dh), jnp.float32)
+        carry = (z, z, z, jnp.full((B, H, Dh), NEG, jnp.float32))
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+    xf = x.astype(jnp.float32)
+    carry, hs = jax.lax.scan(lambda c, xt: _slstm_step(p, c, xt),
+                             carry, xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    h = _groupnorm(h, H) * p["gn"]
+    # GeGLU feed-forward
+    y = (jax.nn.gelu((h @ p["w_ff1"]).astype(jnp.float32)).astype(x.dtype)
+         * (h @ p["w_ff2"]))
+    y = shard(y, ("batch", None, "d_ff"), mesh)
+    out = y @ p["w_ff3"]
+    out = shard(out, ("batch", "seq_sp", None), mesh)
+    new_state = None
+    if state is not None:
+        hN, cN, nN, mN = carry
+        new_state = {"h": hN, "c": cN, "n": nN, "m": mN}
+    return out, new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    Dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, H, Dh), NEG, jnp.float32)}

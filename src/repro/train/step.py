@@ -1,0 +1,231 @@
+"""train_step / serve_step builders: the jit-compiled programs the
+runtime manages. Everything the dry-run lowers comes from here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import backbone
+from repro.models.shardings import axis_size, resolve
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamCfg
+
+
+@dataclass(frozen=True)
+class RunCfg:
+    attention_impl: str = "chunked"   # dense | chunked
+    remat: bool = True
+    adam: AdamCfg = field(default_factory=AdamCfg)
+    param_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # gradient-accumulation microbatches per step (1 = off): divides
+    # activation memory by this factor at unchanged math (grads are
+    # accumulated in f32 with the ZeRO/FSDP sharding)
+    grad_accum: int = 1
+    seed: int = 0
+
+
+def default_run_cfg() -> RunCfg:
+    import os
+    return RunCfg(grad_accum=int(os.environ.get("REPRO_GRAD_ACCUM", "1")))
+
+
+# ------------------------------------------------------------ shardings
+def _tp(mesh: Optional[Mesh]) -> int:
+    return axis_size(mesh, "heads")
+
+
+def _axes_leaf(x) -> bool:
+    # () is an empty *container* (e.g. an empty scan tail), not a spec
+    if isinstance(x, tuple) and len(x) == 0:
+        return False
+    return (isinstance(x, tuple) and
+            all(isinstance(e, (str, type(None))) for e in x))
+
+
+def shardings_from_axes(axes_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, resolve(ax, mesh)), axes_tree,
+        is_leaf=_axes_leaf)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, fsdp: Optional[bool] = None):
+    """TP shardings from the model's logical axes; with fsdp=True (or
+    REPRO_FSDP=1) each param additionally shards its first divisible
+    unsharded dim over the DP axes (ZeRO-3/FSDP — XLA all-gathers
+    per-layer inside the scan). Cuts per-device param+grad bytes by the
+    DP extent at ~2x param-bytes of extra all-gather per step."""
+    import os
+    if fsdp is None:
+        fsdp = os.environ.get("REPRO_FSDP", "0") == "1"
+    sh = shardings_from_axes(backbone.param_axes(cfg), mesh)
+    if not fsdp:
+        return sh
+    specs = param_specs(cfg, mesh)
+    return jax.tree.map(
+        lambda spec, s: NamedSharding(
+            mesh, opt_mod.zero1_pspec(s.spec, spec.shape, mesh)),
+        specs, sh)
+
+
+def param_specs(cfg: ArchConfig, mesh: Optional[Mesh] = None):
+    tp = _tp(mesh)
+    return jax.eval_shape(
+        functools.partial(backbone.init_params, cfg, tp=tp),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh) -> dict:
+    sh = {"tokens": NamedSharding(mesh, resolve(("batch", None), mesh))}
+    if cfg.frontend == "vision_patches":
+        sh["patches"] = NamedSharding(mesh,
+                                      resolve(("batch", None, None), mesh))
+    if cfg.frontend == "audio_frames":
+        sh["frames"] = NamedSharding(mesh,
+                                     resolve(("batch", None, None), mesh))
+    return sh
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    spec = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        spec["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio_frames":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+# ------------------------------------------------------------ train step
+def make_train_step(cfg: ArchConfig, run: RunCfg, mesh: Optional[Mesh]):
+    tp = _tp(mesh)
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.frontend == "vision_patches":
+            kwargs["patches"] = batch["patches"]
+        if cfg.frontend == "audio_frames":
+            kwargs["frames"] = batch["frames"]
+        logits, aux = backbone.forward(params, batch["tokens"], cfg, tp,
+                                       mesh, impl=run.attention_impl,
+                                       remat=run.remat, **kwargs)
+        mask = None
+        if cfg.frontend == "vision_patches":
+            s = batch["tokens"].shape[1]
+            mask = jnp.broadcast_to(jnp.arange(s)[None] >= cfg.num_patches,
+                                    batch["tokens"].shape)
+        loss = backbone.lm_loss(logits, batch["tokens"], mask)
+        return loss + aux, loss
+
+    def train_step(state, batch):
+        n = run.grad_accum
+        if n <= 1:
+            (total, loss), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+        else:
+            def micro(carry, mb):
+                grads_acc, loss_acc, tot_acc = carry
+                (t, l), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb)
+                grads_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), grads_acc, g)
+                return (grads_acc, loss_acc + l, tot_acc + t), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"])
+            (grads, loss, total), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss, total = loss / n, total / n
+        new_params, new_opt, stats = opt_mod.adam_update(
+            grads, state["opt"], run.adam, run.param_dtype)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "total_loss": total, **stats})
+
+    return train_step
+
+
+def init_state(cfg: ArchConfig, run: RunCfg, key,
+               mesh: Optional[Mesh] = None) -> dict:
+    params = backbone.init_params(cfg, key, tp=_tp(mesh),
+                                  dtype=run.param_dtype)
+    return {"params": params, "opt": opt_mod.init_opt_state(params)}
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh) -> dict:
+    psh = param_shardings(cfg, mesh)
+    pspec = param_specs(cfg, mesh)
+    return {"params": psh,
+            "opt": opt_mod.opt_shardings(pspec, psh, mesh)}
+
+
+def state_specs(cfg: ArchConfig, run: RunCfg,
+                mesh: Optional[Mesh] = None) -> dict:
+    pspec = param_specs(cfg, mesh)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "params": pspec,
+        "opt": {"m": jax.tree.map(f32, pspec),
+                "v": jax.tree.map(f32, pspec),
+                "master": jax.tree.map(f32, pspec),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+# ------------------------------------------------------------ serve step
+def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh]):
+    """One-token decode step against a KV cache (the dry-run target for
+    decode_* shapes)."""
+    tp = _tp(mesh)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = backbone.decode_step(params, cache, tokens, cfg,
+                                             tp, mesh)
+        return logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunCfg, mesh: Optional[Mesh]):
+    tp = _tp(mesh)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.frontend == "vision_patches":
+            kwargs["patches"] = batch["patches"]
+        if cfg.frontend == "audio_frames":
+            kwargs["frames"] = batch["frames"]
+        logits, _ = backbone.forward(params, batch["tokens"], cfg, tp,
+                                     mesh, impl=run.attention_impl,
+                                     remat=run.remat, **kwargs)
+        return logits
+
+    return prefill_step
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeCfg,
+                mesh: Optional[Mesh] = None):
+    tp = _tp(mesh)
+    return jax.eval_shape(
+        functools.partial(backbone.init_cache, cfg,
+                          shape.global_batch, shape.seq_len, tp=tp))
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh):
+    """Structural cache shardings (mirrors backbone.init_cache)."""
+    return shardings_from_axes(backbone.stack_cache_axes(cfg), mesh)

@@ -1,0 +1,76 @@
+"""Model-level attention: chunked (online-softmax) == dense, local
+windows, KV caches (linear + ring)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models import attention as att
+
+
+def _qkv(key, B, S, N, G, K, T=None):
+    T = T or S
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, N, G, K), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, N, K), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, N, K), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    return q, k, v, pos, kpos
+
+
+@given(st.sampled_from([17, 32, 64, 96]), st.booleans(),
+       st.sampled_from([0, 8, 24]), st.sampled_from([8, 16, 32]))
+@settings(max_examples=24, deadline=None)
+def test_chunked_equals_dense(S, causal, window, q_chunk):
+    if window and not causal:
+        causal = True
+    q, k, v, pos, kpos = _qkv(jax.random.PRNGKey(0), 2, S, 2, 2, 16)
+    dense = att.dense_attention(q, k, v, pos, kpos, causal=causal,
+                                window=window)
+    chunked = att.chunked_attention(q, k, v, pos, kpos, causal=causal,
+                                    window=window, q_chunk=q_chunk,
+                                    kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_local_attention_matches_masked_dense():
+    S, W = 128, 32
+    q, k, v, pos, kpos = _qkv(jax.random.PRNGKey(1), 2, S, 2, 2, 16)
+    dense = att.dense_attention(q, k, v, pos, kpos, causal=True,
+                                window=W)
+    local = att.local_attention(q, k, v, pos, kpos, window=W,
+                                q_chunk=32)
+    np.testing.assert_allclose(np.asarray(local), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ring_cache_positions():
+    cache = att.init_kv_cache(1, 100, 2, 8, ring=True, window=10)
+    assert cache["k"].shape[1] == 10
+    for i in range(25):
+        kv = jnp.full((1, 1, 2, 8), float(i))
+        cache = att.cache_update(cache, kv, kv, ring=True)
+    pos = np.asarray(att.cache_positions(cache, ring=True))[0]
+    # slots hold absolute positions 15..24 (ring of 10 after 25 writes)
+    assert sorted(p for p in pos if p < 2 ** 29) == list(range(15, 25))
+    slot = 17 % 10
+    assert pos[slot] == 17
+    assert float(cache["k"][0, slot, 0, 0]) == 17.0
+
+
+def test_decode_equals_full_attention():
+    B, S, N, G, K = 2, 12, 2, 2, 16
+    q, k, v, pos, kpos = _qkv(jax.random.PRNGKey(2), B, S, N, G, K)
+    full = att.dense_attention(q, k, v, pos, kpos, causal=True)
+    cache = att.init_kv_cache(B, S, N, K, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        cache = att.cache_update(cache, k[:, t:t + 1], v[:, t:t + 1])
+        o = att.decode_attend(q[:, t:t + 1], cache, pos[:, t:t + 1])
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)

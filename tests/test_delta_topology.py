@@ -1,0 +1,69 @@
+"""Property tests for the two-phase delta-topology algorithm (§5.2)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.groups import (CommGroup, apply_delta, compute_delta_plan)
+
+
+@st.composite
+def group_and_replace(draw):
+    n = draw(st.integers(min_value=2, max_value=24))
+    channels = draw(st.integers(min_value=1, max_value=8))
+    members = list(range(n))
+    k = draw(st.integers(min_value=1, max_value=min(4, n)))
+    leavers = draw(st.permutations(members))[:k]
+    joiners = [100 + i for i in range(k)]
+    return members, channels, dict(zip(leavers, joiners))
+
+
+@given(group_and_replace())
+@settings(max_examples=120, deadline=None)
+def test_delta_plan_invariants(case):
+    members, channels, replace = case
+    g = CommGroup("g", "dp", list(members), channels)
+    g.establish_all()
+    before = dict(g.connections)
+    plan = compute_delta_plan(g, replace)
+
+    # 1. bounded delta: each replaced member touches <= 2 edges/channel
+    assert len(plan.add) <= 2 * channels * len(replace)
+    assert len(plan.drop) == len(plan.add)
+
+    # 2. untouched connections are exactly inherited
+    inherited = set(before) - {c.key() for c in plan.drop}
+    assert plan.inherited == len(inherited)
+    for key in inherited:
+        assert not any(m in key[:2] for m in replace), \
+            "connection adjacent to a leaver must not be inherited"
+
+    # 3. applying the delta yields valid rings over the new membership
+    apply_delta(g, plan)
+    assert set(g.members) == {replace.get(m, m) for m in members}
+    assert g.validate_rings()
+    # 4. leavers fully gone from the connection table
+    for c in g.connections.values():
+        assert c.src not in replace and c.dst not in replace
+
+
+@given(st.integers(min_value=4, max_value=64),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=60, deadline=None)
+def test_delta_fraction_decreases_with_group_size(n, channels):
+    g = CommGroup("g", "dp", list(range(n)), channels)
+    g.establish_all()
+    plan = compute_delta_plan(g, {0: 999})
+    # single replacement: exactly 2 edges per channel change (n > 2)
+    expected = 2 * channels if n > 2 else min(2, n) * channels
+    assert len(plan.add) == expected
+    assert plan.delta_fraction <= 2.0 / n + 1e-9
+
+
+@given(group_and_replace())
+@settings(max_examples=60, deadline=None)
+def test_idempotent_identity_replacement(case):
+    members, channels, _ = case
+    g = CommGroup("g", "pp", list(members), channels)
+    g.establish_all()
+    plan = compute_delta_plan(g, {})
+    assert not plan.add and not plan.drop
+    assert plan.inherited == len(g.connections)

@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: interpret-mode allclose sweeps
+over shapes/dtypes (hypothesis drives the shape space)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("bh,s,d,causal,dtype", [
+    (2, 256, 128, True, jnp.float32),
+    (1, 512, 128, False, jnp.float32),
+    (4, 128, 128, True, jnp.bfloat16),
+    (1, 256, 256, True, jnp.float32),
+])
+def test_flash_attention_matches_ref(bh, s, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (bh, 1, s, d), dtype)
+    k = jax.random.normal(ks[1], (bh, 1, s, d), dtype)
+    v = jax.random.normal(ks[2], (bh, 1, s, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention(q[:, 0], k[:, 0], v[:, 0], causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.sampled_from([128, 256]), st.sampled_from([128, 384]),
+       st.sampled_from([256, 512]), st.integers(1, 4))
+@settings(max_examples=8, deadline=None)
+def test_grouped_matmul_sweep(c, f, d, e):
+    ks = jax.random.split(jax.random.PRNGKey(e), 2)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    w = jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.05
+    out = ops.grouped_matmul(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.grouped_matmul(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.sampled_from([256, 512]), st.sampled_from([512, 1024]),
+       st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_rglru_scan_sweep(s, d, b):
+    ks = jax.random.split(jax.random.PRNGKey(b), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    x = jax.random.normal(ks[1], (b, s, d)) * 0.1
+    h = ops.rglru_scan(a, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(h),
+                               np.asarray(ref.rglru_scan(a, x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,kd,chunk", [(256, 128, 64), (128, 128, 32),
+                                        (192, 64, 64)])
+def test_mlstm_kernel_matches_both_oracles(s, kd, chunk):
+    bh = 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (bh, s, kd)) * 0.3
+    k = jax.random.normal(ks[1], (bh, s, kd)) * 0.3
+    v = jax.random.normal(ks[2], (bh, s, kd)) * 0.3
+    li = jax.random.normal(ks[3], (bh, s)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (bh, s)) + 2.0)
+    hk = ops.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk,
+                             interpret=True)
+    hc = ref.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    hs = ref.mlstm_stepwise(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hc),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hs),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_blocks_divide():
+    """Block sizes that don't divide raise (explicit contract)."""
+    q = jnp.zeros((1, 1, 100, 128))
+    with pytest.raises(AssertionError):
+        ops.flash_attention(q, q, q, block_q=64, block_k=64,
+                            interpret=True)

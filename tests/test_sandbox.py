@@ -1,0 +1,101 @@
+"""Record-replay sandbox properties (§4): determinism, boundary
+awareness, send-bypass, role aliasing and warm-state equivalence."""
+import numpy as np
+import pytest
+
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.configs.gpt import tiny_gpt
+from repro.core.engine import PipelineEngine
+from repro.core.sandbox import CommHooks, CommMode, Tape
+
+CFG = tiny_gpt(layers=4, d=64, heads=4, vocab=256)
+
+
+def build_engine(dp=2, pp=2):
+    cluster = Cluster(8, device_capacity=16 * 2 ** 30)
+    clock = SimClock()
+    comm = CommHooks(clock)
+    eng = PipelineEngine(CFG, dp=dp, pp=pp, global_batch=8, seq_len=32,
+                         cluster=cluster, clock=clock, comm=comm,
+                         micro_batches=2)
+    eng.setup(list(range(dp * pp)))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = build_engine()
+    eng.record_iteration()
+    return eng
+
+
+def test_recording_captures_cross_boundary_traffic(engine):
+    tape = engine.comm.tape
+    assert tape.nbytes() > 0
+    ops = {k[1] for k in tape.entries}
+    assert "p2p" in ops            # pipeline activations/grads
+    assert "all_reduce" in ops     # dp gradient reduction
+    # role aliases exist for the general standby
+    roles = {k[0] for k in tape.entries}
+    assert "first" in roles and "last" in roles
+
+
+def test_record_hook_removed_after_first_iteration(engine):
+    """§4.2: recording happens once; later iterations add nothing."""
+    before = len(engine.comm.tape.entries)
+    engine.train_iteration()
+    assert engine.comm.mode == CommMode.NORMAL
+    assert len(engine.comm.tape.entries) == before
+
+
+def test_shadow_iteration_is_communication_free(engine):
+    jm = engine.cluster[6]
+    engine.comm.replay_bytes = 0
+    role = engine.shadow_iteration(jm, 1, 1)
+    assert role.compile_seconds > 0
+    assert engine.comm.replay_bytes > 0        # served from tape
+    assert engine.comm.mode == CommMode.NORMAL  # restored
+    assert 1 in jm.warm_roles
+
+
+def test_replay_determinism(engine):
+    """Two shadow runs of the same role consume identical tensors."""
+    t = engine.comm.tape
+    key = next(k for k in t.entries if k[0] == 1 and k[1] == "p2p")
+    a = t.get(key).copy()
+    engine.shadow_iteration(engine.cluster[7], 1, 1,
+                            fresh_compile=False)
+    np.testing.assert_array_equal(a, t.get(key))
+
+
+def test_tape_role_alias_dedup():
+    tape = Tape()
+    tape.put((0, "p2p", "act", 0), np.ones(4))
+    n = tape.alias_role(0, "first")
+    assert n == 1
+    np.testing.assert_array_equal(tape.get(("first", "p2p", "act", 0)),
+                                  np.ones(4))
+    # aliases share storage: no byte growth beyond the view
+    assert tape.entries[(0, "p2p", "act", 0)] is \
+        tape.entries[("first", "p2p", "act", 0)]
+
+
+def test_sends_bypassed_in_replay():
+    clock = SimClock()
+    comm = CommHooks(clock, mode=CommMode.REPLAY)
+    comm.sandbox_members = {5}
+    before = clock.now
+    comm.p2p_send(0, "act", src=5, dst=99, value=np.ones(8))
+    comm.barrier()
+    assert clock.now == before     # no time, no effect
+
+
+def test_intra_sandbox_traffic_passes_through():
+    """§4.3 batch migration: joiner<->joiner communication stays real."""
+    clock = SimClock()
+    comm = CommHooks(clock, mode=CommMode.REPLAY)
+    comm.sandbox_members = {1, 2}
+    live = np.arange(6.0)
+    got = comm.p2p_recv(0, "act", src=1, dst=2, value=live)
+    np.testing.assert_array_equal(got, live)

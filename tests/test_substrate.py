@@ -1,0 +1,175 @@
+"""Training substrate: optimizer (ZeRO-1 specs + math), data
+determinism, checkpoint paths, MoE dispatch, memory ledger, metrics."""
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.cluster.costmodel import DEFAULT as COST
+from repro.cluster.node import MemoryLedger
+from repro.core import metrics
+from repro.models import moe as moe_mod
+from repro.models import registry
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+
+
+# ------------------------------------------------------------ optimizer
+def test_adam_matches_manual_math():
+    params = {"w": jnp.ones((4,)) * 2.0}
+    grads = {"w": jnp.ones((4,)) * 0.5}
+    cfg = opt_mod.AdamCfg(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                          weight_decay=0.0, grad_clip=0.0,
+                          warmup_steps=1)
+    state = opt_mod.init_opt_state(params)
+    new_p, new_s, stats = opt_mod.adam_update(grads, state, cfg,
+                                              jnp.float32)
+    m = 0.1 * 0.5
+    v = 0.001 * 0.25
+    mhat, vhat = m / 0.1, v / 0.001
+    want = 2.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert int(new_s["step"]) == 1
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((3,))}
+    grads = {"w": jnp.full((3,), 100.0)}
+    cfg = opt_mod.AdamCfg(lr=1.0, grad_clip=1.0, weight_decay=0.0,
+                          warmup_steps=1)
+    st_ = opt_mod.init_opt_state(params)
+    _, _, stats = opt_mod.adam_update(grads, st_, cfg)
+    assert float(stats["grad_norm"]) > 100.0   # reported pre-clip
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+
+
+def test_zero1_pspec_picks_first_divisible_dim():
+    mesh = _FakeMesh()
+    out = opt_mod.zero1_pspec(P(None, "model", None), (60, 7168, 128),
+                              mesh)
+    assert tuple(out) == (None, "model", None) or out[0] is None
+    # 60 not divisible by 16 -> falls to dim 2? 128 % 16 == 0
+    assert "data" in jax.tree.leaves(tuple(out)) or out[2] == "data"
+
+
+def test_zero1_pspec_leaves_tiny_params_alone():
+    mesh = _FakeMesh()
+    out = opt_mod.zero1_pspec(P(), (7,), mesh)
+    assert tuple(out) == (None,)
+
+
+# ------------------------------------------------------------------ data
+def test_data_random_access_determinism():
+    s1 = data_mod.SyntheticStream(data_mod.DataCfg(512, 4, 64, seed=9))
+    s2 = data_mod.SyntheticStream(data_mod.DataCfg(512, 4, 64, seed=9))
+    for step in (0, 5, 3):      # out of order on purpose
+        np.testing.assert_array_equal(s1.batch(step)["tokens"],
+                                      s2.batch(step)["tokens"])
+    assert not np.array_equal(s1.batch(1)["tokens"],
+                              s1.batch(2)["tokens"])
+
+
+# ------------------------------------------------------------ checkpoint
+def test_disk_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.ones(4)}}
+    path = str(tmp_path / "ck.pkl")
+    nbytes = ckpt.save(path, tree, step=7)
+    assert nbytes == 6 * 8 + 4 * 8
+    loaded, step = ckpt.load(path)
+    assert step == 7
+    np.testing.assert_array_equal(loaded["a"], tree["a"])
+
+
+def test_in_memory_checkpoint_neighbor_recovery():
+    imc = ckpt.InMemoryCheckpoint()
+    ring = [0, 1, 2]
+    for node in ring:
+        imc.put(node, 5, {"w": np.full(3, node)}, ring)
+    imc.drop_node(1)                       # node 1 dies
+    hit = imc.get(1)                       # replica lives on node 2
+    assert hit is not None and hit[0] == 5
+    np.testing.assert_array_equal(hit[1]["w"], np.full(3, 1))
+    # node 1's death also killed the replica it held (node 0's)
+    imc.drop_node(0)
+    assert imc.get(0) is None
+
+
+# ------------------------------------------------------------------- moe
+def test_moe_capacity_dispatch_matches_dense_gather():
+    cfg = registry.reduced_config("qwen2-moe-a2.7b")
+    import dataclasses
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                              capacity_factor=8.0))
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, ep=1,
+                         dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    y1, aux = moe_mod.apply_moe(p, x, cfg)
+    y2 = moe_mod.decode_moe(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_tokens_when_tight():
+    cfg = registry.reduced_config("qwen2-moe-a2.7b")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, ep=1,
+                         dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model),
+                          jnp.float32)
+    y, _ = moe_mod.apply_moe(p, x, cfg, capacity=1)
+    # with capacity 1, most tokens drop -> output much smaller than
+    # the dense-gather result
+    y_full = moe_mod.decode_moe(p, x, cfg)
+    assert float(jnp.abs(y).mean()) < float(jnp.abs(y_full).mean())
+
+
+# ---------------------------------------------------------------- ledger
+def test_memory_ledger_oom_and_peak():
+    led = MemoryLedger(100.0)
+    led.alloc(60, "a")
+    led.alloc(30, "b")
+    assert led.peak == 90
+    led.free("a")
+    assert led.used == 30
+    with pytest.raises(MemoryError):
+        led.alloc(90, "c")
+
+
+# --------------------------------------------------------------- metrics
+def test_mttf_interpolation_monotone():
+    last = 1e9
+    for g in (1024, 4096, 8192, 32768, 131072):
+        h = COST.mttf_hours(g)
+        assert h < last
+        last = h
+    assert 7.0 < COST.mttf_hours(1024) < 9.0
+    assert COST.mttf_hours(131072) < 0.5
+
+
+def test_waste_accounting_scales_with_downtime():
+    a = metrics.gpu_hours_wasted_week(8192, 20, 30,
+                                      infra_reschedule_s=0.0)
+    b = metrics.gpu_hours_wasted_week(8192, 200, 300,
+                                      infra_reschedule_s=0.0)
+    assert b.gpu_hours_week > a.gpu_hours_week * 3
+    assert metrics.rebalance_ettr(600, 18) > 0.97
+
+
+@given(st.floats(1, 1e4), st.floats(0.01, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_ettr_bounds(prod, down):
+    e = metrics.ettr(prod, prod + down)
+    assert 0.0 < e < 1.0

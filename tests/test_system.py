@@ -1,0 +1,135 @@
+"""End-to-end behaviour of the TrainMover runtime: the paper's core
+claims as executable assertions."""
+import numpy as np
+import pytest
+
+from repro.cluster.node import Cluster, NodeStatus
+from repro.cluster.simclock import SimClock
+from repro.configs.gpt import tiny_gpt
+from repro.core.controller import Controller
+from repro.core.engine import PipelineEngine
+from repro.core.sandbox import CommHooks
+
+CFG = tiny_gpt(layers=4, d=64, heads=4, vocab=256)
+
+
+def build(standby=1, dp=2, pp=2, machines=9):
+    cluster = Cluster(machines, device_capacity=16 * 2 ** 30)
+    clock = SimClock()
+    comm = CommHooks(clock)
+    eng = PipelineEngine(CFG, dp=dp, pp=pp, global_batch=8, seq_len=32,
+                         cluster=cluster, clock=clock, comm=comm,
+                         micro_batches=2)
+    return Controller(eng, standby_count=standby)
+
+
+@pytest.fixture(scope="module")
+def reference_losses():
+    ctl = build()
+    ctl.bootstrap_job(list(range(4)))
+    return ctl.train(6)
+
+
+def test_training_learns(reference_losses):
+    assert reference_losses[-1] < reference_losses[0]
+    assert not any(np.isnan(reference_losses))
+
+
+def test_expected_migration_is_transparent(reference_losses):
+    ctl = build()
+    ctl.bootstrap_job(list(range(4)))
+    losses = ctl.train(2)
+    rep = ctl.expected_migration([ctl.engine.grid[(1, 1)]])
+    losses += ctl.train(4)
+    assert np.allclose(reference_losses, losses, rtol=0, atol=0), \
+        "migration must be bitwise transparent"
+    assert rep.downtime < 5.0
+    assert rep.overlap > 0.0          # preparation was off critical path
+    assert rep.mem_overhead_bytes == 0, "zero memory overhead violated"
+    for g in ctl.engine.groups.values():
+        assert g.validate_rings(), g.gid
+
+
+def test_unexpected_failure_with_standby(reference_losses):
+    ctl = build(standby=1)
+    ctl.bootstrap_job(list(range(4)))
+    losses = ctl.train(2)
+    victim = ctl.engine.grid[(0, 1)]
+    rep = ctl.unexpected_failure(victim)
+    losses += ctl.train(4)
+    assert np.allclose(reference_losses, losses, rtol=0, atol=0)
+    assert rep.state_path == "neighbor"      # in-memory redundancy
+    assert rep.lost_iterations == 0          # per-iteration checkpoints
+    assert not ctl.cluster[victim].alive
+
+
+def test_unexpected_failure_without_standby(reference_losses):
+    ctl = build(standby=0)
+    ctl.bootstrap_job(list(range(4)))
+    losses = ctl.train(2)
+    ctl.save_to_storage()
+    rep = ctl.unexpected_failure(ctl.engine.grid[(0, 0)],
+                                 use_standby=False)
+    losses += ctl.train(4)
+    assert np.allclose(reference_losses, losses, rtol=0, atol=0)
+
+
+def test_failure_first_stage_uses_role_delta(reference_losses):
+    """General standby retains the middle role; first-stage failures
+    must still recover via the layer delta (§6.2)."""
+    ctl = build(standby=1, pp=2)
+    ctl.bootstrap_job(list(range(4)))
+    losses = ctl.train(2)
+    rep = ctl.unexpected_failure(ctl.engine.grid[(1, 0)])  # first stage
+    losses += ctl.train(4)
+    assert np.allclose(reference_losses, losses, rtol=0, atol=0)
+
+
+def test_batch_migration_constant_downtime():
+    ctl = build(dp=4, pp=2, machines=16, standby=0)
+    ctl.bootstrap_job(list(range(8)))
+    ctl.train(1)
+    rep1 = ctl.expected_migration([ctl.engine.grid[(0, 1)]])
+    ctl.train(1)
+    rep3 = ctl.expected_migration(
+        [ctl.engine.grid[(d, 0)] for d in range(3)])
+    # one-to-one parallel transfers: 3x machines ~= same downtime
+    assert rep3.downtime < rep1.downtime * 2.0
+    assert rep3.state_bytes > rep1.state_bytes * 2.5
+
+
+def test_straggler_handling_keeps_training():
+    ctl = build()
+    ctl.bootstrap_job(list(range(4)))
+    ctl.train(2)
+    rep = ctl.handle_straggler(slowdown=1.2)
+    assert rep.overlap > 0
+    losses = ctl.train(2)
+    assert not any(np.isnan(losses))
+    slow = [m for m in ctl.cluster.machines.values()
+            if m.straggle_factor > 1.0]
+    assert all(m.mid not in ctl.engine.grid.values() for m in slow), \
+        "straggler machine must be out of the training grid"
+
+
+def test_downtime_ledger_separates_lanes():
+    ctl = build()
+    ctl.bootstrap_job(list(range(4)))
+    ctl.train(2)
+    before = ctl.clock.lane_total("downtime")
+    rep = ctl.expected_migration([ctl.engine.grid[(1, 1)]])
+    after = ctl.clock.lane_total("downtime")
+    assert after - before == pytest.approx(rep.downtime, rel=1e-6)
+
+
+def test_delta_fraction_shrinks_with_scale():
+    """The delta-based design is scale-insensitive: the fraction of
+    connections touched falls as the group grows."""
+    fracs = {}
+    for dp, machines in ((2, 9), (4, 16)):
+        ctl = build(dp=dp, machines=machines, standby=0)
+        ctl.bootstrap_job(list(range(dp * 2)))
+        ctl.train(1)
+        rep = ctl.expected_migration([ctl.engine.grid[(0, 0)]])
+        fracs[dp] = rep.delta_fraction
+    assert fracs[4] < fracs[2] or fracs[4] <= 0.5

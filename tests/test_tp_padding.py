@@ -1,0 +1,111 @@
+"""Head-padding planner: structural properties (hypothesis) and
+functional equivalence of the padded physical attention vs an unpadded
+logical-reference GQA."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as att
+from repro.models import blocks
+from repro.models.tp_padding import plan_heads
+
+
+@st.composite
+def head_cases(draw):
+    kv = draw(st.sampled_from([1, 2, 4, 8, 16, 32]))
+    group = draw(st.integers(min_value=1, max_value=8))
+    tp = draw(st.sampled_from([2, 4, 8, 16]))
+    return kv * group, kv, tp
+
+
+@given(head_cases())
+@settings(max_examples=200, deadline=None)
+def test_plan_invariants(case):
+    h, kv, tp = case
+    plan = plan_heads(h, kv, tp)
+    assert plan.n_q_phys % tp == 0
+    assert plan.n_q_phys >= h
+    assert plan.n_q_phys % plan.n_kv_phys == 0
+    # every logical q head appears exactly once
+    live = [s for s in plan.q_slot_to_logical if s >= 0]
+    assert sorted(live) == list(range(h))
+    # group consistency: physical slot's kv group matches logical's
+    qpk = plan.q_per_phys_kv
+    for slot, lq in enumerate(plan.q_slot_to_logical):
+        if lq < 0:
+            continue
+        assert plan.kv_slot_to_logical[slot // qpk] == lq // (h // kv)
+    # kv replication covers all logical kv heads in order
+    assert sorted(set(plan.kv_slot_to_logical)) == list(range(kv))
+
+
+def _logical_gqa(x, wq, wk, wv, wo, h, kv, k_dim, positions, theta):
+    """Unpadded grouped attention reference."""
+    B, S, D = x.shape
+    q = att.rope(jnp.einsum("bsd,dhk->bshk", x, wq), positions, theta)
+    kk = att.rope(jnp.einsum("bsd,dhk->bshk", x, wk), positions, theta)
+    vv = jnp.einsum("bsd,dhk->bshk", x, wv)
+    g = h // kv
+    qg = q.reshape(B, S, kv, g, k_dim)
+    out = att.dense_attention(qg, kk, vv, positions, positions,
+                              causal=True)
+    out = out.reshape(B, S, h, k_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, wo)
+
+
+def test_padded_model_matches_logical_reference():
+    h, kv, tp = 7, 1, 8            # yi-34b-style indivisible heads
+    d, k_dim = 32, 16
+    cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=d,
+                     num_heads=h, num_kv_heads=kv, d_ff=64,
+                     vocab_size=64, head_dim=k_dim)
+    plan = plan_heads(h, kv, tp)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    # logical weights
+    wq = jax.random.normal(ks[0], (d, h, k_dim), jnp.float32) * 0.1
+    wk = jax.random.normal(ks[1], (d, kv, k_dim), jnp.float32) * 0.1
+    wv = jax.random.normal(ks[2], (d, kv, k_dim), jnp.float32) * 0.1
+    wo = jax.random.normal(ks[3], (h, k_dim, d), jnp.float32) * 0.1
+    # physical layout: scatter logical heads into planned slots
+    wq_p = jnp.zeros((d, plan.n_q_phys, k_dim))
+    wo_p = jnp.zeros((plan.n_q_phys, k_dim, d))
+    for slot, lq in enumerate(plan.q_slot_to_logical):
+        if lq >= 0:
+            wq_p = wq_p.at[:, slot].set(wq[:, lq])
+            wo_p = wo_p.at[slot].set(wo[lq])
+    wk_p = wk[:, list(plan.kv_slot_to_logical)]
+    wv_p = wv[:, list(plan.kv_slot_to_logical)]
+
+    B, S = 2, 12
+    x = jax.random.normal(ks[4], (B, S, d), jnp.float32) * 0.3
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    params = {"wq": wq_p, "wk": wk_p, "wv": wv_p, "wo": wo_p}
+    got = blocks.apply_attn(params, x, cfg, tp, None,
+                            positions=positions, impl="dense")
+    want = _logical_gqa(x, wq, wk, wv, wo, h, kv, k_dim, positions,
+                        cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_replicated_kv_slots_are_exact_ties():
+    """TP replication must not create extra distinct kv heads: physical
+    slots mapping to the same logical head share weights at init."""
+    from repro.models import blocks as blocks_mod
+    from repro.models import registry
+    cfg = registry.get_config("yi-34b")      # 56 q / 8 kv at tp=16
+    p = blocks_mod.init_attn(jax.random.PRNGKey(3), cfg, 16,
+                             jnp.bfloat16)
+    plan = plan_heads(cfg.num_heads, cfg.num_kv_heads, 16)
+    assert plan.n_kv_phys == 16 and plan.n_kv == 8
+    for j in range(plan.n_kv_phys):
+        lj = plan.kv_slot_to_logical[j]
+        ref_slot = plan.kv_slot_to_logical.index(lj)
+        np.testing.assert_array_equal(np.asarray(p["wk"][:, j]),
+                                      np.asarray(p["wk"][:, ref_slot]))
+        np.testing.assert_array_equal(np.asarray(p["wv"][:, j]),
+                                      np.asarray(p["wv"][:, ref_slot]))

@@ -1,0 +1,89 @@
+"""Two-phase CCL setup: group states, pre-wired joiner links, host-only
+phase-1 footprint and the downtime/overlap split."""
+import pytest
+
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.core import two_phase
+from repro.core.groups import CommGroup, GroupState, build_groups
+
+
+def _setup(n=8, channels=4):
+    cluster = Cluster(n + 8)   # room for joiners with ids >= 10
+    g = CommGroup("dp.s0", "dp", list(range(n)), channels)
+    g.establish_all()
+    return cluster, g
+
+
+def test_phase1_is_host_only_and_overlapped():
+    cluster, g = _setup()
+    clock = SimClock()
+    dev_before = {m.mid: m.device.used
+                  for m in cluster.machines.values()}
+    two_phase.ccl_prepare_stayers(g, {0: 10}, cluster, clock)
+    two_phase.ccl_prepare_joiners(g, {0: 10}, cluster, clock)
+    assert g.state == GroupState.READY_TO_SWITCHOUT
+    assert clock.lane_total("downtime") == 0.0
+    assert clock.lane_total("overlap") > 0.0
+    for mid, used in dev_before.items():
+        assert cluster[mid].device.used == used, "phase 1 touched HBM"
+    assert cluster[1].host.used > 0          # stayer host staging
+    assert cluster[10].host.used > 0         # joiner host staging
+
+
+def test_switchover_applies_only_delta():
+    cluster, g = _setup(n=8, channels=4)
+    clock = SimClock()
+    conns_before = dict(g.connections)
+    two_phase.ccl_prepare_stayers(g, {3: 11}, cluster, clock)
+    two_phase.ccl_prepare_joiners(g, {3: 11}, cluster, clock)
+    reps = two_phase.switchover_many([g], cluster, clock)
+    rep = reps[0]
+    assert g.state == GroupState.ACTIVE
+    assert 11 in g.members and 3 not in g.members
+    assert g.validate_rings()
+    assert rep.qps_added <= 2 * 4            # <= 2 x channels
+    untouched = {k: c for k, c in conns_before.items()
+                 if 3 not in k[:2]}
+    for k in untouched:
+        assert k in g.connections, "inherited connection dropped"
+    # host staging freed after switchover
+    assert cluster[1].host.used == 0
+
+
+def test_joiner_joiner_links_prewired_in_phase1():
+    """§5.2: when multiple joiners are adjacent, their mutual links are
+    established during phase 1, not during downtime."""
+    cluster, g = _setup(n=6, channels=2)
+    clock = SimClock()
+    replace = {2: 10, 3: 11}     # adjacent members
+    two_phase.ccl_prepare_stayers(g, replace, cluster, clock)
+    rep1 = two_phase.ccl_prepare_joiners(g, replace, cluster, clock)
+    assert rep1.qps_prewired > 0
+    reps = two_phase.switchover_many([g], cluster, clock)
+    assert reps[0].qps_added + rep1.qps_prewired == \
+        len(g.pending_plan.add) if g.pending_plan else True
+    assert g.validate_rings()
+
+
+def test_full_reinit_much_slower_than_phase2():
+    cluster, g = _setup(n=16, channels=8)
+    clock_full = SimClock()
+    t_full = two_phase.full_reinit(g, cluster, clock_full)
+    g2 = CommGroup("dp.s1", "dp", list(range(16)), 8)
+    g2.establish_all()
+    clock2 = SimClock()
+    two_phase.ccl_prepare_stayers(g2, {5: 23}, cluster, clock2)
+    two_phase.ccl_prepare_joiners(g2, {5: 23}, cluster, clock2)
+    two_phase.switchover_many([g2], cluster, clock2)
+    t_phase2 = clock2.lane_total("downtime")
+    assert t_phase2 < t_full * 0.2, (t_phase2, t_full)
+
+
+def test_build_groups_shapes():
+    grid = {(d, s): d * 2 + s for d in range(4) for s in range(2)}
+    groups = build_groups(4, 2, grid)
+    assert set(groups) == {"dp.s0", "dp.s1", "pp.d0", "pp.d1", "pp.d2",
+                           "pp.d3"}
+    assert groups["dp.s0"].members == [0, 2, 4, 6]
+    assert groups["pp.d1"].members == [2, 3]
