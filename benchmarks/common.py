@@ -33,7 +33,8 @@ def gpt_params(name: str) -> float:
 
 def build_realexec(dp=2, pp=2, layers=4, d=128, heads=4, vocab=512,
                    batch=8, seq=64, standby=1, machines=8,
-                   cost: Optional[CostModel] = None) -> Controller:
+                   cost: Optional[CostModel] = None,
+                   use_flat_buffers: bool = True) -> Controller:
     """A CPU-runnable cluster: tiny GPT, real JAX compute + compiles."""
     cost = cost or COST
     cluster = Cluster(machines, device_capacity=16 * 2 ** 30)
@@ -43,7 +44,8 @@ def build_realexec(dp=2, pp=2, layers=4, d=128, heads=4, vocab=512,
                                   vocab=vocab), dp=dp, pp=pp,
                          global_batch=batch, seq_len=seq,
                          cluster=cluster, clock=clock, comm=comm,
-                         cost=cost, micro_batches=2)
+                         cost=cost, micro_batches=2,
+                         use_flat_buffers=use_flat_buffers)
     ctl = Controller(eng, cost=cost, standby_count=standby)
     return ctl
 

@@ -1,0 +1,139 @@
+"""Engine iteration throughput: flat-bucket vs per-leaf hot path.
+
+Measures, at dp=2 pp=2 and dp=4 pp=2, (a) wall-clock seconds per
+`train_iteration`, (b) simulated communication seconds per iteration
+(the SimClock charges for allreduce/p2p/barrier), and (c) all_reduce
+hook invocations per iteration — before and after gradient bucketing.
+Writes the result to BENCH_engine.json at the repo root so successive
+PRs can track the perf trajectory.
+
+Protocol: alternating BLOCKS of iterations per engine (steady-state
+runs don't switch engines every iteration, and per-iteration
+interleaving evicts the measured engine's working set), the first
+iteration of each block discarded as cache re-warm, min across blocks
+as the primary estimator (the only one that filters scheduler
+preemption out of a ~40 ms iteration on a shared box; timeit does the
+same).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_realexec, csv_line, emit
+
+BLOCK = 8                   # timed iterations per block (+1 warm-up)
+ROUNDS = 3                  # alternating block rounds per engine
+_COMM_PREFIXES = ("allreduce:", "p2p:", "barrier:")
+
+
+def _build(use_flat: bool, dp: int):
+    ctl = build_realexec(dp=dp, pp=2, d=64, seq=32, vocab=256,
+                         batch=4 * dp, standby=0, machines=2 * dp + 1,
+                         use_flat_buffers=use_flat)
+    eng = ctl.engine
+    eng.setup(list(range(2 * dp)))
+    eng.train_iteration()                       # warm-up (compiles)
+    return eng
+
+
+def _timed_iteration(eng) -> float:
+    t0 = time.perf_counter()
+    eng.train_iteration()
+    # block on EVERY machine's state so async work cannot leak into the
+    # other engine's next sample
+    for d in range(eng.dp):
+        for s in range(eng.pp):
+            jax.block_until_ready(eng.machine(d, s).payload["params"])
+            jax.block_until_ready(eng.machine(d, s).payload["opt"])
+    return time.perf_counter() - t0
+
+
+def _stats(eng, samples, t0_phase) -> dict:
+    # block warm-ups also charge the SimClock, so divide by the real
+    # iteration count, not the timed-sample count
+    n_iters = ROUNDS * (BLOCK + 1)
+    comm_s = sum(p.duration for p in eng.clock.phases[t0_phase:]
+                 if p.name.startswith(_COMM_PREFIXES)) / n_iters
+    return {
+        "wall_s_per_iter": float(np.min(samples)),
+        "wall_s_per_iter_median": float(np.median(samples)),
+        "wall_s_per_iter_mean": float(np.mean(samples)),
+        "sim_comm_s_per_iter": comm_s,
+        "all_reduce_calls_per_iter": eng.comm.op_counts["all_reduce"],
+        "p2p_recv_calls_per_iter": eng.comm.op_counts.get("p2p", 0),
+        "final_loss": eng.losses[-1],
+    }
+
+
+def _compare(dp: int) -> dict:
+    eng_flat = _build(True, dp)
+    eng_leaf = _build(False, dp)
+    p0_flat = len(eng_flat.clock.phases)
+    p0_leaf = len(eng_leaf.clock.phases)
+    t_flat, t_leaf = [], []
+    for r in range(ROUNDS):
+        # alternating block order, so machine-load drift hits both
+        # paths equally across rounds
+        pair = ((eng_flat, t_flat), (eng_leaf, t_leaf))
+        for eng, acc in (pair if r % 2 == 0 else pair[::-1]):
+            _timed_iteration(eng)               # block warm-up
+            acc.extend(_timed_iteration(eng) for _ in range(BLOCK))
+    flat = _stats(eng_flat, t_flat, p0_flat)
+    per_leaf = _stats(eng_leaf, t_leaf, p0_leaf)
+    return {
+        "config": {"dp": dp, "pp": 2, "layers": 4, "d": 64,
+                   "batch": 4 * dp, "seq": 32,
+                   "iters": ROUNDS * (BLOCK + 1)},
+        "per_leaf": per_leaf,
+        "flat": flat,
+        "wall_speedup": per_leaf["wall_s_per_iter"]
+        / max(flat["wall_s_per_iter"], 1e-12),
+        "sim_comm_speedup": per_leaf["sim_comm_s_per_iter"]
+        / max(flat["sim_comm_s_per_iter"], 1e-12),
+        "allreduce_call_ratio": per_leaf["all_reduce_calls_per_iter"]
+        / max(flat["all_reduce_calls_per_iter"], 1),
+        # bitwise on this backend; the hard assert in run() only
+        # requires atol parity so a 1-ULP XLA fusion change on another
+        # backend can't fail the perf harness (numerics are enforced
+        # in tests/test_flatbuf.py)
+        "loss_parity": abs(per_leaf["final_loss"]
+                           - flat["final_loss"]) == 0.0,
+        "loss_delta": abs(per_leaf["final_loss"] - flat["final_loss"]),
+    }
+
+
+def run() -> None:
+    result = {f"dp{dp}": _compare(dp) for dp in (2, 4)}
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_engine.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    for key, r in result.items():
+        rows = [dict(path=k, **r[k]) for k in ("per_leaf", "flat")]
+        emit(rows, f"engine iteration throughput ({key}, pp=2)")
+        print(csv_line(
+            f"iter_throughput.{key}",
+            r["flat"]["wall_s_per_iter"] * 1e6,
+            f"allreduce_ratio={r['allreduce_call_ratio']:.1f}"
+            f";wall_speedup={r['wall_speedup']:.2f}"
+            f";comm_speedup={r['sim_comm_speedup']:.2f}"))
+        assert r["allreduce_call_ratio"] >= 2.0, r
+        assert r["loss_delta"] < 1e-5, \
+            f"bucketing broke numerics: loss_delta={r['loss_delta']}"
+    print(f"BENCH_engine.json written -> {out}")
+
+
+if __name__ == "__main__":
+    run()

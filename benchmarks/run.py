@@ -11,6 +11,7 @@ import traceback
 sys.path.insert(0, "src")
 
 MODULES = [
+    "iter_throughput",
     "table1_restart",
     "table2_ccl_setup",
     "fig08_downtime_scale",

@@ -54,6 +54,13 @@ class CostModel:
     # ---- per-group channel count (NCCL channels per comm group)
     channels_per_group: int = 8
 
+    # ---- gradient coalescing (NCCL/DDP-style flat buckets)
+    # A contiguous buffer is chunked into pipelined buckets: one full
+    # RTT per collective launch, plus a small per-extra-bucket launch
+    # overhead (kernel enqueue + channel handoff, ~tens of us).
+    coalesce_bucket_bytes: float = 25 * 2 ** 20     # DDP bucket_cap_mb
+    bucket_launch_overhead: float = 20e-6
+
     def mttf_hours(self, gpus: int) -> float:
         """Job-level MTTF at `gpus` scale (log-log interp/extrapolate)."""
         pts = sorted(self.mttf_table)

@@ -25,6 +25,7 @@ from repro.configs.base import ArchConfig
 from repro.cluster.costmodel import CostModel, DEFAULT
 from repro.cluster.node import Cluster, Machine, NodeStatus, Role
 from repro.cluster.simclock import SimClock
+from repro.core import flatbuf
 from repro.core import groups as groups_mod
 from repro.core.sandbox import CommHooks, CommMode, Tape
 from repro.models import backbone, blocks
@@ -126,7 +127,8 @@ class PipelineEngine:
                  clock: SimClock, comm: CommHooks,
                  cost: CostModel = DEFAULT, micro_batches: int = 2,
                  seed: int = 0,
-                 adam: Optional[opt_mod.AdamCfg] = None):
+                 adam: Optional[opt_mod.AdamCfg] = None,
+                 use_flat_buffers: bool = True):
         assert global_batch % (dp * micro_batches) == 0
         self.cfg, self.dp, self.pp = cfg, dp, pp
         self.global_batch, self.seq_len = global_batch, seq_len
@@ -136,7 +138,18 @@ class PipelineEngine:
             cluster, clock, comm, cost
         self.adam = adam or opt_mod.AdamCfg(lr=1e-3, warmup_steps=10)
         self.seed = seed
+        # Flat-buffer hot path: per-stage contiguous gradient bucket,
+        # ONE all-reduce per stage, ONE Adam update broadcast to the DP
+        # replicas. False keeps the per-leaf reference path (used by the
+        # numerics-parity tests and the before/after benchmark).
+        self.use_flat_buffers = use_flat_buffers
         self.grid: Dict[Tuple[int, int], int] = {}
+        self._coords: Dict[int, Tuple[int, int]] = {}
+        self._flat_specs: Dict[int, flatbuf.FlatSpec] = {}
+        self._state_specs: Dict[int, flatbuf.ByteSpec] = {}
+        self._grad_bytes: Dict[int, int] = {}
+        self._bucket_reduce: Dict[int, Any] = {}
+        self._batch_cache: Tuple[int, Optional[np.ndarray]] = (-1, None)
         self.groups: Dict[str, groups_mod.CommGroup] = {}
         self.stream = data_mod.SyntheticStream(
             data_mod.DataCfg(cfg.vocab_size, global_batch, seq_len,
@@ -149,6 +162,10 @@ class PipelineEngine:
     # ------------------------------------------------------------ setup
     def setup(self, machine_ids: List[int]) -> None:
         assert len(machine_ids) >= self.dp * self.pp
+        # re-setup must not leave stale mid -> (d, s) entries behind:
+        # coords_of would silently serve coordinates for evicted mids
+        self.grid.clear()
+        self._coords.clear()
         full = backbone.init_params(self.cfg, jax.random.PRNGKey(self.seed),
                                     tp=1, dtype=jnp.float32)
         it = iter(machine_ids)
@@ -156,6 +173,7 @@ class PipelineEngine:
             for s in range(self.pp):
                 mid = next(it)
                 self.grid[(d, s)] = mid
+                self._coords[mid] = (d, s)
                 m = self.cluster[mid]
                 m.status = NodeStatus.TRAINING
                 m.role = Role(d, s, self.pp)
@@ -166,7 +184,7 @@ class PipelineEngine:
                              "step": 0}
                 m.device.alloc(tree_bytes(m.payload) , "train_state",
                                self.clock.now)
-                m.device.alloc(tree_bytes(params), "grad_buffer",
+                m.device.alloc(self.grad_buffer_bytes(s), "grad_buffer",
                                self.clock.now)
         self.groups = groups_mod.build_groups(
             self.dp, self.pp, self.grid, channels=self.cost.channels_per_group)
@@ -177,10 +195,11 @@ class PipelineEngine:
         return self.cluster[self.grid[(d, s)]]
 
     def coords_of(self, mid: int) -> Tuple[int, int]:
-        for k, v in self.grid.items():
-            if v == mid:
-                return k
-        raise KeyError(mid)
+        """O(1) reverse lookup, kept in sync by setup/swap_machine."""
+        try:
+            return self._coords[mid]
+        except KeyError:
+            raise KeyError(mid) from None
 
     def _estimate_stage_flops(self) -> float:
         n = 0
@@ -191,6 +210,57 @@ class PipelineEngine:
         return 3 * per_layer * (cfg.num_layers / self.pp) * tokens
 
     # --------------------------------------------------------- compiling
+    def _stage_param_spec(self, stage: int):
+        """ShapeDtypeStruct pytree of this stage's params (no data)."""
+        return jax.eval_shape(
+            lambda k: split_stage_params(
+                backbone.init_params(self.cfg, k, tp=1,
+                                     dtype=jnp.float32),
+                stage, self.pp, self.cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def flat_spec(self, stage: int) -> flatbuf.FlatSpec:
+        """Gradient-bucket layout for a stage (derivable without setup,
+        so joiners/standbys can build buckets for roles they never
+        held)."""
+        if stage not in self._flat_specs:
+            self._flat_specs[stage] = flatbuf.FlatSpec.from_tree(
+                self._stage_param_spec(stage))
+        return self._flat_specs[stage]
+
+    def grad_buffer_bytes(self, stage: int) -> int:
+        """Gradient-buffer footprint for a stage. Dtype-agnostic on the
+        per-leaf reference path (FlatSpec needs a homogeneous dtype)."""
+        if self.use_flat_buffers:
+            return self.flat_spec(stage).nbytes
+        if stage not in self._grad_bytes:
+            self._grad_bytes[stage] = flatbuf.ByteSpec.from_tree(
+                self._stage_param_spec(stage)).nbytes
+        return self._grad_bytes[stage]
+
+    def bucket_reduce_fn(self, stage: int):
+        """The whole DP reduction as ONE fused program: per-replica
+        bucket drains and the cross-replica sum collapse into a single
+        pass (XLA fuses the adds into the concat's output writes),
+        mirroring how a CCL reduces in transport.  Compiled lazily and
+        cached OUTSIDE compile_role so shadow/standby fresh compiles —
+        which never run it — don't get its compile time charged to the
+        downtime lane."""
+        if stage not in self._bucket_reduce:
+            spec = self.flat_spec(stage)
+            pspec = self._stage_param_spec(stage)
+
+            def bucket_reduce(*trees):
+                bufs = [spec.flatten(t) for t in trees]
+                red = bufs[0]
+                for b in bufs[1:]:
+                    red = red + b
+                return red
+
+            self._bucket_reduce[stage] = jax.jit(bucket_reduce).lower(
+                *([pspec] * self.dp)).compile()
+        return self._bucket_reduce[stage]
+
     def compile_role(self, stage: int, fresh: bool = False,
                      charge: Optional[str] = None) -> CompiledRole:
         """AOT-compile the stage programs. fresh=True bypasses the
@@ -202,12 +272,7 @@ class PipelineEngine:
         B, S = self.mb_size, self.seq_len
         tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
         act = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
-        pspec = jax.eval_shape(
-            lambda k: split_stage_params(
-                backbone.init_params(self.cfg, k, tp=1,
-                                     dtype=jnp.float32),
-                stage, self.pp, cfg),
-            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspec = self._stage_param_spec(stage)
         x_in = tok if stage == 0 else act
         t0 = time.perf_counter()
         out = {}
@@ -219,14 +284,29 @@ class PipelineEngine:
             out["mid_bwd"] = jax.jit(fns["mid_bwd"]) \
                 .lower(pspec, x_in, act).compile()
 
-        def upd(grads, opt, n_avg):
-            g = jax.tree.map(lambda x: x / n_avg, grads)
-            return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
-
-        gspec = pspec
         ospec = jax.eval_shape(opt_mod.init_opt_state, pspec)
-        out["update"] = jax.jit(upd).lower(
-            gspec, ospec, jax.ShapeDtypeStruct((), jnp.float32)).compile()
+        navg_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        if self.use_flat_buffers:
+            spec = self.flat_spec(stage)
+            # drain a replica's accumulated grad tree into its
+            # contiguous bucket (one program; on real accelerators XLA
+            # writes the grads straight into the bucket layout)
+            out["flatten"] = jax.jit(spec.flatten).lower(pspec).compile()
+
+            def upd_flat(flat_grads, opt, n_avg):
+                g = spec.unflatten(flat_grads / n_avg)
+                return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
+
+            out["update"] = jax.jit(upd_flat).lower(
+                jax.ShapeDtypeStruct((spec.size,), spec.dtype),
+                ospec, navg_spec).compile()
+        else:
+            def upd(grads, opt, n_avg):
+                g = jax.tree.map(lambda x: x / n_avg, grads)
+                return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
+
+            out["update"] = jax.jit(upd).lower(
+                pspec, ospec, navg_spec).compile()
         dt = time.perf_counter() - t0
         role = CompiledRole(out, dt)
         if not fresh:
@@ -237,7 +317,10 @@ class PipelineEngine:
 
     # ----------------------------------------------------------- running
     def _mb_tokens(self, it: int, d: int, mb: int) -> jnp.ndarray:
-        batch = self.stream.batch(it)["tokens"]
+        # one SyntheticStream materialization per iteration, not dp*nmb
+        if self._batch_cache[0] != it:
+            self._batch_cache = (it, self.stream.batch(it)["tokens"])
+        batch = self._batch_cache[1]
         per_d = batch.shape[0] // self.dp
         chunk = batch[d * per_d:(d + 1) * per_d]
         return jnp.asarray(chunk[mb * self.mb_size:(mb + 1) * self.mb_size])
@@ -299,8 +382,26 @@ class PipelineEngine:
                         jax.tree.map(jnp.add, grads_acc[key], dp_)
 
         # DP gradient all-reduce per stage + update
+        navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
         for s in range(self.pp):
             stacked = [grads_acc[(d, s)] for d in range(self.dp)]
+            fns = self.compile_role(s).fns
+            if self.use_flat_buffers:
+                # ONE bucketed collective per stage (NCCL-style), then
+                # ONE Adam update broadcast to every DP replica — their
+                # opt states are identical by construction.
+                reduced = self.comm.all_reduce(
+                    stage_role_key(s), "gradbucket",
+                    [self.bucket_reduce_fn(s)(*stacked)],
+                    participants=self.dp)
+                new_p, new_opt, _ = fns["update"](
+                    reduced, self.machine(0, s).payload["opt"], navg)
+                for d in range(self.dp):
+                    m = self.machine(d, s)
+                    m.payload["params"] = new_p
+                    m.payload["opt"] = new_opt
+                    m.payload["step"] = it + 1
+                continue
             leaves0, tdef = jax.tree.flatten(stacked[0])
             reduced_leaves = []
             for li in range(len(leaves0)):
@@ -310,10 +411,8 @@ class PipelineEngine:
                                            f"grad{li}", arrs)
                 reduced_leaves.append(red)
             reduced = jax.tree.unflatten(tdef, reduced_leaves)
-            navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
             for d in range(self.dp):
                 m = self.machine(d, s)
-                fns = self.compile_role(s).fns
                 new_p, new_opt, _ = fns["update"](reduced,
                                                   m.payload["opt"], navg)
                 m.payload["params"] = new_p
@@ -381,11 +480,17 @@ class PipelineEngine:
                 dy = self.comm.p2p_recv(role_key, "grad", src=-1,
                                         dst=machine.mid, value=None)
                 dp_, _ = role.fns["mid_bwd"](state["params"], x, dy)
-            leaves = jax.tree.leaves(dp_)
-            red = [self.comm.all_reduce(role_key, f"grad{i}", [g])
-                   for i, g in enumerate(leaves)]
-            reduced = jax.tree.unflatten(jax.tree.structure(dp_), red)
             navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
+            if self.use_flat_buffers:
+                # one bucket entry replayed from the tape, not per-leaf
+                bucket = role.fns["flatten"](dp_)
+                reduced = self.comm.all_reduce(role_key, "gradbucket",
+                                               [bucket])
+            else:
+                leaves = jax.tree.leaves(dp_)
+                red = [self.comm.all_reduce(role_key, f"grad{i}", [g])
+                       for i, g in enumerate(leaves)]
+                reduced = jax.tree.unflatten(jax.tree.structure(dp_), red)
             role.fns["update"](reduced, state["opt"], navg)
             shadow_exec = time.perf_counter() - t0
             machine.warm_roles[role_key] = role
@@ -408,10 +513,39 @@ class PipelineEngine:
         m = self.cluster[mid]
         m.payload.update(jax.tree.map(jnp.asarray, state))
 
+    def state_spec(self, stage: int) -> flatbuf.ByteSpec:
+        """Byte layout of a stage's full train state (params + opt),
+        shared by every DP replica of that stage."""
+        if stage not in self._state_specs:
+            pspec = self._stage_param_spec(stage)
+            self._state_specs[stage] = flatbuf.ByteSpec.from_tree(
+                {"params": pspec,
+                 "opt": jax.eval_shape(opt_mod.init_opt_state, pspec)})
+        return self._state_specs[stage]
+
+    def get_state_flat(self, mid: int) -> Tuple[np.ndarray, int]:
+        """(contiguous uint8 state buffer, step) — the §8.5 transfer
+        unit: one buffer over the repurposed gradient channel."""
+        d, s = self.coords_of(mid)
+        m = self.cluster[mid]
+        buf = self.state_spec(s).pack({"params": m.payload["params"],
+                                       "opt": m.payload["opt"]})
+        return buf, int(m.payload["step"])
+
+    def set_state_flat(self, mid: int, stage: int, buf: np.ndarray,
+                       step: int) -> None:
+        tree = self.state_spec(stage).unpack(buf)
+        m = self.cluster[mid]
+        m.payload["params"] = jax.tree.map(jnp.asarray, tree["params"])
+        m.payload["opt"] = jax.tree.map(jnp.asarray, tree["opt"])
+        m.payload["step"] = step
+
     def swap_machine(self, leaver: int, joiner: int) -> None:
         """Replace leaver with joiner in the grid + role bookkeeping."""
         d, s = self.coords_of(leaver)
         self.grid[(d, s)] = joiner
+        self._coords.pop(leaver, None)
+        self._coords[joiner] = (d, s)
         jm, lm = self.cluster[joiner], self.cluster[leaver]
         jm.role, lm.role = lm.role, None
         jm.status = NodeStatus.TRAINING

@@ -1,0 +1,131 @@
+"""Flat-buffer gradient/state representation (the §8.5 channel, literal).
+
+Real CCLs do not launch one ring per parameter tensor: DDP/NCCL coalesce
+gradients into contiguous buckets and pay the collective latency once
+per bucket, not once per leaf.  FFTrainer (arXiv 2512.03644) and
+ElasWave (arXiv 2510.00606) push the same idea further — a contiguous
+flat shard is the unit of state management, which is what makes failover
+and elastic resharding almost free.  This module is that representation
+for the repro:
+
+  FlatSpec  - homogeneous-dtype view of a pytree as ONE 1-D array
+              (leaf offsets/shapes recorded once at setup).  Used for
+              the per-stage gradient bucket: microbatch accumulation is
+              a single vector add, the DP all-reduce is a single
+              collective, and the Adam update consumes the bucket
+              directly inside jit.
+  ByteSpec  - dtype-preserving byte packing of an arbitrary pytree into
+              one uint8 buffer.  Used by state_sync so the leaver ->
+              joiner transfer ships exactly one contiguous buffer over
+              the repurposed gradient channel (§8.5), bit-for-bit.
+
+Both specs are built from shape metadata (eval_shape output works), so
+joiners can unpack buffers for roles they have never held.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_meta(tree) -> Tuple[Any, Tuple, Tuple]:
+    """(treedef, shapes, dtypes) for arrays OR ShapeDtypeStructs."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(np.shape(l) if not hasattr(l, "shape")
+                         else l.shape) for l in leaves)
+    dtypes = tuple(np.dtype(l.dtype) if hasattr(l, "dtype")
+                   else np.asarray(l).dtype for l in leaves)
+    return treedef, shapes, dtypes
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """One contiguous 1-D buffer of a common dtype for a pytree."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    size: int                       # total elements
+    dtype: Any
+
+    @classmethod
+    def from_tree(cls, tree) -> "FlatSpec":
+        treedef, shapes, dtypes = _leaf_meta(tree)
+        if len(set(dtypes)) > 1:
+            raise TypeError(f"FlatSpec needs a homogeneous dtype, "
+                            f"got {sorted(set(str(d) for d in dtypes))}")
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        offsets, off = [], 0
+        for n in sizes:
+            offsets.append(off)
+            off += n
+        return cls(treedef, shapes, sizes, tuple(offsets), off,
+                   dtypes[0] if dtypes else np.dtype(np.float32))
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(self.dtype).itemsize
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree -> one 1-D buffer (jnp; traceable inside jit)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate([jnp.ravel(l) for l in leaves]) \
+            if leaves else jnp.zeros((0,), self.dtype)
+
+    def unflatten(self, buf):
+        """1-D buffer -> pytree (jnp; traceable inside jit)."""
+        leaves = [jnp.reshape(buf[o:o + n], s)
+                  for o, n, s in zip(self.offsets, self.sizes, self.shapes)]
+        return self.treedef.unflatten(leaves)
+
+    def zeros(self) -> jnp.ndarray:
+        return jnp.zeros((self.size,), self.dtype)
+
+
+@dataclass(frozen=True)
+class ByteSpec:
+    """Dtype-preserving byte layout of a pytree in one uint8 buffer."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    nbytes_leaf: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    nbytes: int
+
+    @classmethod
+    def from_tree(cls, tree) -> "ByteSpec":
+        treedef, shapes, dtypes = _leaf_meta(tree)
+        nb = tuple(int(np.prod(s, dtype=np.int64)) * d.itemsize
+                   for s, d in zip(shapes, dtypes))
+        offsets, off = [], 0
+        for n in nb:
+            offsets.append(off)
+            off += n
+        return cls(treedef, shapes, dtypes, nb, tuple(offsets), off)
+
+    def pack(self, tree) -> np.ndarray:
+        """Pytree -> one contiguous uint8 buffer (exact bytes)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        buf = np.empty((self.nbytes,), np.uint8)
+        for leaf, off, nb, dt in zip(leaves, self.offsets,
+                                     self.nbytes_leaf, self.dtypes):
+            a = np.ascontiguousarray(np.asarray(leaf))
+            if a.dtype != dt:       # a cast would silently round values
+                raise TypeError(f"leaf dtype {a.dtype} != spec dtype "
+                                f"{dt}; bit-for-bit packing impossible")
+            buf[off:off + nb] = a.reshape(-1).view(np.uint8)
+        return buf
+
+    def unpack(self, buf: np.ndarray):
+        """uint8 buffer -> pytree of numpy arrays (exact bytes)."""
+        assert buf.nbytes == self.nbytes, (buf.nbytes, self.nbytes)
+        leaves = []
+        for off, nb, dt, sh in zip(self.offsets, self.nbytes_leaf,
+                                   self.dtypes, self.shapes):
+            a = np.ascontiguousarray(buf[off:off + nb]).view(dt).reshape(sh)
+            leaves.append(a.copy())
+        return self.treedef.unflatten(leaves)

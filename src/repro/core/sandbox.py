@@ -89,33 +89,55 @@ class CommHooks:
         self._counters: Dict[Tuple, int] = {}
         self.replay_bytes = 0
         self.record_bytes = 0
+        # per-iteration hook-invocation counts (reset with the idx
+        # counters at the top of each iteration); the throughput
+        # benchmark asserts bucketing shrinks op_counts["all_reduce"].
+        self.op_counts: Dict[str, int] = {}
 
     # ---------------------------------------------------------- helpers
     def _next_idx(self, role_key, op, tag) -> int:
         k = (role_key, op, tag)
         i = self._counters.get(k, 0)
         self._counters[k] = i + 1
+        self.op_counts[op] = self.op_counts.get(op, 0) + 1
         return i
 
     def reset_counters(self) -> None:
         self._counters.clear()
+        self.op_counts = {}
 
     def _charge(self, nbytes: float, inter: bool, name: str,
                 participants: int = 2) -> None:
+        """Latency + bandwidth charge for one collective launch.
+
+        Bucket-aware: a CCL splits a large contiguous buffer into
+        coalesce_bucket_bytes chunks pipelined back-to-back, so the
+        full RTT is paid once and each extra bucket only adds a launch
+        overhead — whereas N separate per-leaf calls each pay the RTT.
+        """
         bw = self.cost.bw_inter_node if inter else self.cost.bw_intra_node
+        bucket = self.cost.coalesce_bucket_bytes
+        extra = 0.0
+        if bucket > 0 and nbytes > bucket:
+            n_buckets = int(np.ceil(nbytes / bucket))
+            extra = (n_buckets - 1) * self.cost.bucket_launch_overhead
         if participants > 2:     # ring collective: 2(n-1)/n traversals
             n = participants
-            t = self.cost.rtt_tcp + 2 * (n - 1) / n * nbytes / bw
+            t = self.cost.rtt_tcp + extra + 2 * (n - 1) / n * nbytes / bw
         else:
-            t = self.cost.rtt_tcp + nbytes / bw
+            t = self.cost.rtt_tcp + extra + nbytes / bw
         self.clock.advance(t, name, lane=self.lane)
 
     # ------------------------------------------------------ collectives
     def all_reduce(self, role_key, tag: str, arrays: Sequence,
-                   mid: Optional[int] = None):
+                   mid: Optional[int] = None,
+                   participants: Optional[int] = None):
         """DP ring all-reduce across `arrays` (one per member). In
         REPLAY mode only one array (the sandboxed caller's) is passed
-        and the recorded result is returned."""
+        and the recorded result is returned.  A caller whose reduction
+        is already fused into one program (the flat gradient bucket)
+        passes the single reduced array plus `participants`, the ring
+        size to charge for."""
         idx = self._next_idx(role_key, "all_reduce", tag)
         key = (role_key, "all_reduce", tag, idx)
         if self.mode == CommMode.REPLAY:
@@ -124,9 +146,11 @@ class CommHooks:
         out = arrays[0]
         for a in arrays[1:]:
             out = out + a
-        nb = np.asarray(arrays[0]).nbytes
+        # .nbytes avoids a blocking device->host copy for jax arrays
+        nb = getattr(arrays[0], "nbytes", None) or \
+            np.asarray(arrays[0]).nbytes
         self._charge(nb, inter=True, name=f"allreduce:{tag}",
-                     participants=len(arrays))
+                     participants=participants or len(arrays))
         if self.mode == CommMode.RECORD:
             self.tape.put(key, out)
             self.record_bytes += np.asarray(out).nbytes
@@ -144,7 +168,7 @@ class CommHooks:
                 return value
             self.replay_bytes += self.tape.get(key).nbytes
             return self.tape.get(key)
-        nb = np.asarray(value).nbytes
+        nb = getattr(value, "nbytes", None) or np.asarray(value).nbytes
         self._charge(nb, inter=True, name=f"p2p:{tag}")
         if self.mode == CommMode.RECORD:
             self.tape.put(key, value)

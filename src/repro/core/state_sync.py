@@ -32,11 +32,17 @@ def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
                      cost: CostModel = DEFAULT, lane: str = "downtime",
                      charge: bool = True) -> TransferReport:
     """Expected-event path: direct GPU-to-GPU state copy over RDMA.
-    With charge=False the caller accounts the (parallel) time itself."""
+    With charge=False the caller accounts the (parallel) time itself.
+
+    The transfer unit is the leaver's packed flat state buffer
+    (core/flatbuf.ByteSpec): ONE contiguous buffer shipped over the
+    repurposed gradient-bucket channel — the §8.5 choreography made
+    literal, with a single RTT instead of one per state leaf."""
     cl: Cluster = engine.cluster
     lm, jm = cl[leaver], cl[joiner]
-    state = engine.get_state(leaver)
-    nbytes = tree_bytes(state)
+    stage = engine.coords_of(leaver)[1]
+    buf, step = engine.get_state_flat(leaver)
+    nbytes = buf.nbytes
     baseline_peak = jm.device.used
 
     # Leaver: training is over for it — the gradient buffer becomes the
@@ -51,14 +57,14 @@ def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
     if charge:
         clock.advance(t, f"state_xfer:{leaver}->{joiner}", lane=lane)
 
-    engine.set_state(joiner, state)      # the real copy
+    engine.set_state_flat(joiner, stage, buf, step)   # the real copy
+    grad_bytes = engine.grad_buffer_bytes(stage)
     jm.device.alloc(nbytes, "train_state", clock.now)
-    jm.device.alloc(tree_bytes(state["params"]), "grad_buffer", clock.now)
+    jm.device.alloc(grad_bytes, "grad_buffer", clock.now)
     # tear the channel down before phase 2 completes
     jm.device.free("xfer_channel", clock.now)
     lm.device.free("xfer_channel", clock.now)
-    peak_delta = jm.device.peak - baseline_peak - nbytes \
-        - tree_bytes(state["params"])
+    peak_delta = jm.device.peak - baseline_peak - nbytes - grad_bytes
     return TransferReport(nbytes, t, "leaver", max(peak_delta, 0.0))
 
 

@@ -1,0 +1,15 @@
+"""Pallas-TPU API compatibility.
+
+`pltpu.TPUCompilerParams` was renamed `pltpu.CompilerParams` across JAX
+releases; resolve whichever this install provides so the kernels run on
+both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import _compat
+
 NEG_INF = -1e30
 
 
@@ -98,7 +100,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),    # running max
             pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

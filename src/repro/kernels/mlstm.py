@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG = -1e30
 
 
@@ -95,7 +97,7 @@ def mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int = 64,
             pltpu.VMEM((1, kd), jnp.float32),      # n
             pltpu.VMEM((1, 1), jnp.float32),       # m
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, log_i.reshape(bh, 1, s), log_f.reshape(bh, 1, s))

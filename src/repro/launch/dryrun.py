@@ -50,7 +50,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t2 = time.time()
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        ca = hlo_analyzer.xla_cost_analysis(compiled)
         rec.update(
             status="ok", lower_s=round(t1 - t0, 2),
             compile_s=round(t2 - t1, 2),

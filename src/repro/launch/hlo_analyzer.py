@@ -37,6 +37,15 @@ _OP_RE = re.compile(
     r"([a-z][\w\-]*)\((.*)$")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized `compiled.cost_analysis()`: older JAX returns a list
+    of one per-device dict, newer JAX returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(type_str):

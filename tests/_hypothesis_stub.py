@@ -1,0 +1,162 @@
+"""Minimal offline stand-in for `hypothesis`.
+
+This environment cannot pip-install hypothesis, but the property tests
+(attention, delta-topology, kernels, substrate, tp-padding) are tier-1.
+This shim implements exactly the surface those tests use — ``given``,
+``settings`` and the ``integers / floats / booleans / sampled_from /
+permutations / composite`` strategies — with a deterministic seeded RNG
+so runs are reproducible.  When the real hypothesis is importable,
+conftest prefers it and this module is never registered.
+
+Semantics: ``@given`` runs ``max_examples`` drawn examples per test
+(boundary-biased draws for integers/floats); a failing example re-raises
+with the drawn values attached to the assertion message.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, Sequence
+
+_SEED = 0x7261            # deterministic across runs
+_BOUNDARY_P = 0.15        # probability of drawing a range endpoint
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any],
+                 label: str = "strategy"):
+        self._draw_fn = draw_fn
+        self.label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw_fn(rng)
+
+    def __repr__(self) -> str:
+        return f"<stub {self.label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_P:
+            return rng.choice((min_value, max_value))
+        return rng.randint(min_value, max_value)
+    return SearchStrategy(draw, f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_P:
+            return rng.choice((float(min_value), float(max_value)))
+        return rng.uniform(float(min_value), float(max_value))
+    return SearchStrategy(draw, f"floats({min_value},{max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements),
+                          f"sampled_from({elements!r})")
+
+
+def permutations(values: Sequence) -> SearchStrategy:
+    values = list(values)
+
+    def draw(rng):
+        out = list(values)
+        rng.shuffle(out)
+        return out
+    return SearchStrategy(draw, "permutations")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+    def make(*args, **kwargs) -> SearchStrategy:
+        def draw_outer(rng):
+            def draw(strategy: SearchStrategy):
+                return strategy.draw(rng)
+            return fn(draw, *args, **kwargs)
+        return SearchStrategy(draw_outer, f"composite({fn.__name__})")
+    return make
+
+
+class _AssumptionFailed(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _AssumptionFailed()
+    return True
+
+
+def settings(*, max_examples: int = 20, **_ignored) -> Callable:
+    """Decorator recording run parameters; unknown kwargs (deadline,
+    suppress_health_check, ...) are accepted and ignored."""
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies: SearchStrategy) -> Callable:
+    def deco(fn):
+        # like real hypothesis, positional strategies fill the
+        # RIGHTMOST parameters; everything to their left is a pytest
+        # fixture the wrapper must keep visible in its signature
+        params = list(inspect.signature(fn).parameters.values())
+        n_drawn = len(strategies)
+        assert n_drawn <= len(params), \
+            f"{fn.__name__}: more strategies than parameters"
+        drawn_names = [p.name for p in params[len(params) - n_drawn:]]
+
+        def wrapper(*fixture_args, **fixture_kwargs):
+            conf = getattr(wrapper, "_stub_settings", None) or \
+                getattr(fn, "_stub_settings", {"max_examples": 20})
+            rng = random.Random(_SEED)
+            for i in range(conf["max_examples"]):
+                drawn = tuple(s.draw(rng) for s in strategies)
+                try:
+                    fn(*fixture_args, **fixture_kwargs,
+                       **dict(zip(drawn_names, drawn)))
+                except _AssumptionFailed:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} of {fn.__name__}: "
+                        f"args={drawn!r}") from e
+        # expose only the fixture parameters to pytest (no __wrapped__,
+        # so the drawn parameters are never mistaken for fixtures)
+        wrapper.__signature__ = inspect.Signature(
+            params[:len(params) - n_drawn])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        if hasattr(fn, "pytestmark"):
+            wrapper.pytestmark = fn.pytestmark
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this shim as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from",
+                 "permutations", "just", "composite"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules.setdefault("hypothesis", hyp)
+    sys.modules.setdefault("hypothesis.strategies", strat)

@@ -38,6 +38,7 @@ def test_forward_shapes_no_nans(arch):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow          # full jitted train step per arch (~1 min total)
 @pytest.mark.parametrize("arch", registry.ARCH_IDS)
 def test_train_step_runs(arch):
     cfg = registry.reduced_config(arch)

@@ -1,0 +1,166 @@
+"""Flat-buffer gradient bucketing: layout round-trips, bitwise parity
+of the bucketed hot path against the per-leaf reference path, and the
+RECORD -> REPLAY round-trip through the fused tape keys."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.node import Cluster
+from repro.cluster.simclock import SimClock
+from repro.configs.gpt import tiny_gpt
+from repro.core import flatbuf
+from repro.core.engine import PipelineEngine
+from repro.core.sandbox import CommHooks
+
+CFG = tiny_gpt(layers=4, d=64, heads=4, vocab=256)
+
+
+def build_engine(flat: bool, machines: int = 8) -> PipelineEngine:
+    cluster = Cluster(machines, device_capacity=16 * 2 ** 30)
+    clock = SimClock()
+    comm = CommHooks(clock)
+    eng = PipelineEngine(CFG, dp=2, pp=2, global_batch=8, seq_len=32,
+                         cluster=cluster, clock=clock, comm=comm,
+                         micro_batches=2, use_flat_buffers=flat)
+    eng.setup(list(range(4)))
+    return eng
+
+
+# ------------------------------------------------------------ layouts
+def test_flatspec_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.float32),
+                  "d": jnp.zeros((1, 2, 2), jnp.float32)}}
+    spec = flatbuf.FlatSpec.from_tree(tree)
+    assert spec.size == 6 + 4 + 4
+    buf = spec.flatten(tree)
+    assert buf.shape == (spec.size,)
+    back = spec.unflatten(buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flatspec_rejects_mixed_dtypes():
+    with pytest.raises(TypeError):
+        flatbuf.FlatSpec.from_tree({"a": jnp.ones(2, jnp.float32),
+                                    "b": jnp.ones(2, jnp.int32)})
+
+
+def test_bytespec_roundtrip_mixed_dtypes():
+    tree = {"w": np.linspace(0, 1, 12, dtype=np.float32).reshape(3, 4),
+            "n": np.arange(5, dtype=np.int32),
+            "s": np.int64(7)}
+    spec = flatbuf.ByteSpec.from_tree(tree)
+    buf = spec.pack(tree)
+    assert buf.dtype == np.uint8 and buf.nbytes == spec.nbytes
+    back = spec.unpack(buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bytespec_built_from_shape_structs():
+    """Joiners unpack buffers for roles they never held: the spec must
+    be derivable from eval_shape metadata alone."""
+    tree = {"w": np.ones((3, 4), np.float32)}
+    spec_meta = flatbuf.ByteSpec.from_tree(
+        {"w": jax.ShapeDtypeStruct((3, 4), jnp.float32)})
+    buf = spec_meta.pack(tree)
+    np.testing.assert_array_equal(spec_meta.unpack(buf)["w"], tree["w"])
+
+
+# ----------------------------------------------------- engine numerics
+# these build real engines (XLA compiles); the layout tests above stay
+# in the fast -m "not slow" loop
+engine_test = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def engines():
+    flat, ref = build_engine(True), build_engine(False)
+    return flat, ref
+
+
+@engine_test
+def test_bucketed_path_matches_per_leaf_bitwise(engines):
+    """Flat-bucket all-reduce + single-update-broadcast must reproduce
+    the per-leaf reference losses and params exactly over >=3 iters."""
+    flat, ref = engines
+    losses_flat = [flat.train_iteration() for _ in range(3)]
+    losses_ref = [ref.train_iteration() for _ in range(3)]
+    assert losses_flat == losses_ref, "losses must be bitwise identical"
+    for d in range(2):
+        for s in range(2):
+            pf = flat.machine(d, s).payload
+            pr = ref.machine(d, s).payload
+            for a, b in zip(jax.tree.leaves(pf["params"]),
+                            jax.tree.leaves(pr["params"])):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+            for a, b in zip(jax.tree.leaves(pf["opt"]),
+                            jax.tree.leaves(pr["opt"])):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+
+@engine_test
+def test_bucketing_fuses_the_collective(engines):
+    """>=2x fewer all_reduce hook invocations per iteration (one per
+    stage bucket instead of one per leaf)."""
+    flat, ref = engines
+    flat.train_iteration()
+    ref.train_iteration()
+    n_flat = flat.comm.op_counts["all_reduce"]
+    n_ref = ref.comm.op_counts["all_reduce"]
+    assert n_flat == flat.pp            # exactly one bucket per stage
+    assert n_ref >= 2 * n_flat, (n_ref, n_flat)
+
+
+@engine_test
+def test_record_replay_roundtrip_with_fused_keys():
+    """RECORD writes one bucket entry per stage; a joiner's shadow
+    iteration replays it from the tape (fewer entries than the per-leaf
+    tape, same replayed bytes semantics)."""
+    eng = build_engine(True)
+    eng.record_iteration()
+    tape = eng.comm.tape
+    ar_keys = [k for k in tape.entries
+               if k[1] == "all_reduce" and isinstance(k[0], int)]
+    assert all(k[2] == "gradbucket" for k in ar_keys)
+    assert len(ar_keys) == eng.pp       # one fused entry per stage
+    spec = eng.flat_spec(0)
+    assert tape.get(ar_keys[0]).shape == (spec.size,)
+
+    ref = build_engine(False)
+    ref.record_iteration()
+    ref_ar = [k for k in ref.comm.tape.entries
+              if k[1] == "all_reduce" and isinstance(k[0], int)]
+    assert len(ref_ar) >= 2 * len(ar_keys), "tape must shrink"
+
+    # joiner replay through the fused keys
+    jm = eng.cluster[6]
+    eng.comm.replay_bytes = 0
+    role = eng.shadow_iteration(jm, 1, 1)
+    assert eng.comm.replay_bytes >= eng.flat_spec(1).nbytes
+    assert 1 in jm.warm_roles and role.compile_seconds > 0
+
+
+@engine_test
+def test_flat_state_transfer_is_exact():
+    """leaver->joiner ships one contiguous buffer, bit-for-bit."""
+    eng = build_engine(True)
+    eng.train_iteration()
+    src = eng.grid[(1, 1)]
+    buf, step = eng.get_state_flat(src)
+    assert buf.dtype == np.uint8
+    ref_state = eng.get_state(src)
+    eng.set_state_flat(7, 1, buf, step)
+    got = eng.get_state(7)
+    assert got["step"] == ref_state["step"]
+    for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                    jax.tree.leaves(got["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ref_state["opt"]),
+                    jax.tree.leaves(got["opt"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -62,8 +62,8 @@ def test_xla_cost_analysis_undercounts_scan_loops():
     """Documents WHY the analyzer exists: XLA reports ~1 body."""
     c3 = _build(3, True)
     c8 = _build(8, True)
-    f3 = c3.cost_analysis()["flops"]
-    f8 = c8.cost_analysis()["flops"]
+    f3 = hlo_analyzer.xla_cost_analysis(c3)["flops"]
+    f8 = hlo_analyzer.xla_cost_analysis(c8)["flops"]
     assert abs(f3 - f8) / max(f3, f8) < 0.05   # ~identical despite 8/3x
     a8 = hlo_analyzer.analyze(c8.as_text())
     assert a8.dot_flops > 2.0 * f8             # analyzer sees the loop

@@ -11,6 +11,9 @@ from repro.core.sandbox import CommHooks, CommMode, Tape
 
 CFG = tiny_gpt(layers=4, d=64, heads=4, vocab=256)
 
+# real engine builds + shadow compiles; deselect with -m "not slow"
+engine_test = pytest.mark.slow
+
 
 def build_engine(dp=2, pp=2):
     cluster = Cluster(8, device_capacity=16 * 2 ** 30)
@@ -30,6 +33,7 @@ def engine():
     return eng
 
 
+@engine_test
 def test_recording_captures_cross_boundary_traffic(engine):
     tape = engine.comm.tape
     assert tape.nbytes() > 0
@@ -41,6 +45,7 @@ def test_recording_captures_cross_boundary_traffic(engine):
     assert "first" in roles and "last" in roles
 
 
+@engine_test
 def test_record_hook_removed_after_first_iteration(engine):
     """§4.2: recording happens once; later iterations add nothing."""
     before = len(engine.comm.tape.entries)
@@ -49,6 +54,7 @@ def test_record_hook_removed_after_first_iteration(engine):
     assert len(engine.comm.tape.entries) == before
 
 
+@engine_test
 def test_shadow_iteration_is_communication_free(engine):
     jm = engine.cluster[6]
     engine.comm.replay_bytes = 0
@@ -59,6 +65,7 @@ def test_shadow_iteration_is_communication_free(engine):
     assert 1 in jm.warm_roles
 
 
+@engine_test
 def test_replay_determinism(engine):
     """Two shadow runs of the same role consume identical tensors."""
     t = engine.comm.tape

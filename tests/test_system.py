@@ -12,6 +12,10 @@ from repro.core.sandbox import CommHooks
 
 CFG = tiny_gpt(layers=4, d=64, heads=4, vocab=256)
 
+# end-to-end engine/migration runs (~2 min of real XLA compiles);
+# deselect with -m "not slow" for the fast loop
+pytestmark = pytest.mark.slow
+
 
 def build(standby=1, dp=2, pp=2, machines=9):
     cluster = Cluster(machines, device_capacity=16 * 2 ** 30)
