@@ -110,5 +110,28 @@ class CostModel:
     def transfer(self, nbytes: float, bw: float, lat: float = 0.0) -> float:
         return lat + nbytes / bw
 
+    def collective_seconds(self, nbytes: float, bw: float,
+                           participants: int = 2) -> float:
+        """Cost of ONE collective launch over a `participants`-ring.
+
+        Bucket-aware: a CCL splits a large contiguous buffer into
+        coalesce_bucket_bytes chunks pipelined back-to-back, so the
+        full RTT is paid once and each extra bucket only adds a launch
+        overhead — whereas N separate per-leaf calls each pay the RTT.
+        This is the single source of truth for both the synchronous
+        charge (CommHooks._charge) and the async ledger issue cost
+        (CommHooks.all_reduce_async / overlapped p2p), so the exposed
+        remainder computed by SimClock.wait_async stays consistent
+        with what a blocking call would have charged."""
+        bucket = self.coalesce_bucket_bytes
+        extra = 0.0
+        if bucket > 0 and nbytes > bucket:
+            n_buckets = int(math.ceil(nbytes / bucket))
+            extra = (n_buckets - 1) * self.bucket_launch_overhead
+        if participants > 2:     # ring collective: 2(n-1)/n traversals
+            n = participants
+            return self.rtt_tcp + extra + 2 * (n - 1) / n * nbytes / bw
+        return self.rtt_tcp + extra + nbytes / bw
+
 
 DEFAULT = CostModel()

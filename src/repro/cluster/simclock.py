@@ -4,12 +4,22 @@ The runtime advances time in *phases*: several nodes work concurrently
 inside a phase, and the phase costs max(per-node time). Downtime vs
 overlapped (background) time is tracked separately — the whole point of
 TrainMover is moving work from the former lane to the latter.
+
+The async ledger (issue_async / wait_async / drain_async) extends the
+same idea to steady-state communication: a collective issued on a
+channel progresses on that channel's own timeline while the issuing
+lane keeps advancing (backward compute, other channels).  When the
+lane finally blocks on the result, only the *exposed* remainder —
+max(0, ready_at - now) — is charged; the hidden part is tallied in
+comm_hidden so benchmarks can report an overlap fraction.  Ops sharing
+a channel serialize (one NCCL stream per communicator); distinct
+channels are concurrent.
 """
 from __future__ import annotations
 
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 @dataclass
@@ -21,11 +31,28 @@ class PhaseRecord:
     per_node: Dict[int, float] = field(default_factory=dict)
 
 
+@dataclass
+class AsyncOp:
+    """One in-flight collective on the per-channel ledger."""
+    handle: int
+    channel: Any
+    name: str
+    issued_at: float
+    cost: float
+    ready_at: float               # channel-serialized completion time
+
+
 class SimClock:
     def __init__(self):
         self.now = 0.0
         self.phases: List[PhaseRecord] = []
         self._lane_totals: Dict[str, float] = {}
+        # ---- async-collective ledger
+        self._channel_free: Dict[Any, float] = {}
+        self._inflight: Dict[int, AsyncOp] = {}
+        self._next_handle = 0
+        self.comm_exposed = 0.0   # ledger seconds charged to a lane
+        self.comm_hidden = 0.0    # ledger seconds hidden under other work
 
     def advance(self, seconds: float, name: str = "",
                 lane: str = "train") -> None:
@@ -33,6 +60,52 @@ class SimClock:
         self.phases.append(PhaseRecord(name, self.now, seconds, lane))
         self.now += seconds
         self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) + seconds
+
+    # ------------------------------------------------------ async ledger
+    def issue_async(self, channel, seconds: float, name: str = "") -> int:
+        """Enqueue `seconds` of work on `channel` without blocking the
+        lane. Returns a handle for wait_async. Ops on one channel
+        serialize behind each other; channels run concurrently."""
+        assert seconds >= 0
+        start = max(self.now, self._channel_free.get(channel, 0.0))
+        ready = start + seconds
+        self._channel_free[channel] = ready
+        h = self._next_handle
+        self._next_handle += 1
+        self._inflight[h] = AsyncOp(h, channel, name, self.now, seconds,
+                                    ready)
+        return h
+
+    def wait_async(self, handle: int, lane: str = "train") -> float:
+        """Block the lane on an issued op: charge only the exposed
+        remainder (work not already hidden under time that elapsed
+        since issue). Waiting twice — e.g. after a drain — is a no-op.
+        Returns the exposed seconds charged."""
+        op = self._inflight.pop(handle, None)
+        if op is None:
+            return 0.0
+        exposed = max(0.0, op.ready_at - self.now)
+        self.comm_exposed += exposed
+        self.comm_hidden += max(0.0, op.cost - exposed)
+        if exposed > 0:
+            self.advance(exposed, f"exposed:{op.name}", lane=lane)
+        return exposed
+
+    def drain_async(self, lane: str = "train") -> float:
+        """Wait on every in-flight op (issue order). After a drain the
+        lane has caught up with the slowest channel."""
+        total = 0.0
+        for h in sorted(self._inflight):
+            total += self.wait_async(h, lane=lane)
+        return total
+
+    def pending_async(self) -> int:
+        return len(self._inflight)
+
+    def overlap_fraction(self) -> float:
+        """Share of ledger comm seconds hidden under other work."""
+        tot = self.comm_exposed + self.comm_hidden
+        return self.comm_hidden / tot if tot > 0 else 0.0
 
     @contextmanager
     def parallel(self, name: str, lane: str = "downtime"):

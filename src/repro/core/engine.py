@@ -128,7 +128,8 @@ class PipelineEngine:
                  cost: CostModel = DEFAULT, micro_batches: int = 2,
                  seed: int = 0,
                  adam: Optional[opt_mod.AdamCfg] = None,
-                 use_flat_buffers: bool = True):
+                 use_flat_buffers: bool = True,
+                 param_dtype=jnp.float32):
         assert global_batch % (dp * micro_batches) == 0
         self.cfg, self.dp, self.pp = cfg, dp, pp
         self.global_batch, self.seq_len = global_batch, seq_len
@@ -138,17 +139,27 @@ class PipelineEngine:
             cluster, clock, comm, cost
         self.adam = adam or opt_mod.AdamCfg(lr=1e-3, warmup_steps=10)
         self.seed = seed
-        # Flat-buffer hot path: per-stage contiguous gradient bucket,
-        # ONE all-reduce per stage, ONE Adam update broadcast to the DP
-        # replicas. False keeps the per-leaf reference path (used by the
-        # numerics-parity tests and the before/after benchmark).
+        # Flat-buffer hot path: per-stage contiguous per-dtype gradient
+        # buckets, ONE async all-reduce per bucket issued as soon as the
+        # stage's grads are accumulated (exposed remainder charged at
+        # wait), a fully-flat Adam state, and ONE update broadcast to
+        # the DP replicas. False keeps the per-leaf reference path
+        # (numerics-parity tests and the before/after benchmark).
         self.use_flat_buffers = use_flat_buffers
+        # Mixed precision: stack (transformer block) weights are cast
+        # to param_dtype; embeddings / final norm / head stay fp32, so
+        # param_dtype=bf16 produces genuinely mixed-dtype stages whose
+        # grads need per-dtype segment buckets.
+        self.param_dtype = jnp.dtype(param_dtype)
         self.grid: Dict[Tuple[int, int], int] = {}
         self._coords: Dict[int, Tuple[int, int]] = {}
-        self._flat_specs: Dict[int, flatbuf.FlatSpec] = {}
+        self._flat_specs: Dict[int, flatbuf.SegmentedSpec] = {}
         self._state_specs: Dict[int, flatbuf.ByteSpec] = {}
         self._grad_bytes: Dict[int, int] = {}
         self._bucket_reduce: Dict[int, Any] = {}
+        # stage -> (bucket tuple, materialized params): DP replicas
+        # share the broadcast buckets, so they share the unflatten too
+        self._mat_cache: Dict[int, Tuple[Any, Any]] = {}
         self._batch_cache: Tuple[int, Optional[np.ndarray]] = (-1, None)
         self.groups: Dict[str, groups_mod.CommGroup] = {}
         self.stream = data_mod.SyntheticStream(
@@ -177,12 +188,24 @@ class PipelineEngine:
                 m = self.cluster[mid]
                 m.status = NodeStatus.TRAINING
                 m.role = Role(d, s, self.pp)
-                params = split_stage_params(full, s, self.pp, self.cfg)
+                params = self._cast_stage_params(
+                    split_stage_params(full, s, self.pp, self.cfg))
                 params = jax.tree.map(jnp.asarray, params)
-                m.payload = {"params": params,
-                             "opt": opt_mod.init_opt_state(params),
-                             "step": 0}
-                m.device.alloc(tree_bytes(m.payload) , "train_state",
+                if self.use_flat_buffers:
+                    spec = self.flat_spec(s)
+                    m.payload = {
+                        "params": params,
+                        "param_segs": spec.flatten(params),
+                        "_seg_stage": s,
+                        "opt": opt_mod.init_flat_opt_state(spec, params),
+                        "step": 0}
+                else:
+                    m.payload = {"params": params,
+                                 "opt": opt_mod.init_opt_state(params),
+                                 "step": 0}
+                m.device.alloc(tree_bytes({"params": params,
+                                           "opt": m.payload["opt"],
+                                           "step": 0}), "train_state",
                                self.clock.now)
                 m.device.alloc(self.grad_buffer_bytes(s), "grad_buffer",
                                self.clock.now)
@@ -202,7 +225,6 @@ class PipelineEngine:
             raise KeyError(mid) from None
 
     def _estimate_stage_flops(self) -> float:
-        n = 0
         cfg = self.cfg
         per_layer = (12 * cfg.d_model ** 2 +
                      2 * cfg.d_model * cfg.d_ff * 3)
@@ -210,27 +232,36 @@ class PipelineEngine:
         return 3 * per_layer * (cfg.num_layers / self.pp) * tokens
 
     # --------------------------------------------------------- compiling
+    def _cast_stage_params(self, params: dict) -> dict:
+        """Mixed-precision cast: stack weights to param_dtype, the
+        embedding / final norm / head stay fp32."""
+        if self.param_dtype == jnp.float32:
+            return params
+        out = dict(params)
+        out["stack"] = jax.tree.map(
+            lambda x: x.astype(self.param_dtype), params["stack"])
+        return out
+
     def _stage_param_spec(self, stage: int):
         """ShapeDtypeStruct pytree of this stage's params (no data)."""
         return jax.eval_shape(
-            lambda k: split_stage_params(
+            lambda k: self._cast_stage_params(split_stage_params(
                 backbone.init_params(self.cfg, k, tp=1,
                                      dtype=jnp.float32),
-                stage, self.pp, self.cfg),
+                stage, self.pp, self.cfg)),
             jax.ShapeDtypeStruct((2,), jnp.uint32))
 
-    def flat_spec(self, stage: int) -> flatbuf.FlatSpec:
-        """Gradient-bucket layout for a stage (derivable without setup,
-        so joiners/standbys can build buckets for roles they never
-        held)."""
+    def flat_spec(self, stage: int) -> flatbuf.SegmentedSpec:
+        """Gradient-bucket layout for a stage: one contiguous bucket
+        per dtype (derivable without setup, so joiners/standbys can
+        build buckets for roles they never held)."""
         if stage not in self._flat_specs:
-            self._flat_specs[stage] = flatbuf.FlatSpec.from_tree(
+            self._flat_specs[stage] = flatbuf.SegmentedSpec.from_tree(
                 self._stage_param_spec(stage))
         return self._flat_specs[stage]
 
     def grad_buffer_bytes(self, stage: int) -> int:
-        """Gradient-buffer footprint for a stage. Dtype-agnostic on the
-        per-leaf reference path (FlatSpec needs a homogeneous dtype)."""
+        """Gradient-buffer footprint for a stage."""
         if self.use_flat_buffers:
             return self.flat_spec(stage).nbytes
         if stage not in self._grad_bytes:
@@ -242,20 +273,23 @@ class PipelineEngine:
         """The whole DP reduction as ONE fused program: per-replica
         bucket drains and the cross-replica sum collapse into a single
         pass (XLA fuses the adds into the concat's output writes),
-        mirroring how a CCL reduces in transport.  Compiled lazily and
-        cached OUTSIDE compile_role so shadow/standby fresh compiles —
-        which never run it — don't get its compile time charged to the
-        downtime lane."""
+        mirroring how a CCL reduces in transport.  Returns the reduced
+        per-dtype segment buffers.  Compiled lazily and cached OUTSIDE
+        compile_role so shadow/standby fresh compiles — which never run
+        it — don't get its compile time charged to the downtime lane."""
         if stage not in self._bucket_reduce:
             spec = self.flat_spec(stage)
             pspec = self._stage_param_spec(stage)
 
             def bucket_reduce(*trees):
-                bufs = [spec.flatten(t) for t in trees]
-                red = bufs[0]
-                for b in bufs[1:]:
-                    red = red + b
-                return red
+                # leafwise adds first, ONE drain into the buckets after
+                # (same add order elementwise, so bitwise-identical to
+                # reducing the buckets — but XLA emits one copy per
+                # leaf instead of re-laying-out every replica's tree)
+                acc = trees[0]
+                for t in trees[1:]:
+                    acc = jax.tree.map(jnp.add, acc, t)
+                return spec.flatten(acc)
 
             self._bucket_reduce[stage] = jax.jit(bucket_reduce).lower(
                 *([pspec] * self.dp)).compile()
@@ -284,26 +318,44 @@ class PipelineEngine:
             out["mid_bwd"] = jax.jit(fns["mid_bwd"]) \
                 .lower(pspec, x_in, act).compile()
 
-        ospec = jax.eval_shape(opt_mod.init_opt_state, pspec)
         navg_spec = jax.ShapeDtypeStruct((), jnp.float32)
         if self.use_flat_buffers:
             spec = self.flat_spec(stage)
+            seg_specs = tuple(jax.ShapeDtypeStruct((g.size,), g.dtype)
+                              for g in spec.segments)
             # drain a replica's accumulated grad tree into its
-            # contiguous bucket (one program; on real accelerators XLA
+            # per-dtype buckets (one program; on real accelerators XLA
             # writes the grads straight into the bucket layout)
-            out["flatten"] = jax.jit(spec.flatten).lower(pspec).compile()
+            out["flatten"] = jax.jit(
+                lambda t: spec.flatten(t)).lower(pspec).compile()
+            # params materialize from the buckets only at the fwd/bwd
+            # boundary (leavers ship the buckets without ever paying
+            # this)
+            out["unflatten"] = jax.jit(
+                lambda segs: spec.unflatten(segs)).lower(
+                    seg_specs).compile()
+            ospec = jax.eval_shape(
+                lambda p: opt_mod.init_flat_opt_state(spec, p), pspec)
 
-            def upd_flat(flat_grads, opt, n_avg):
-                g = spec.unflatten(flat_grads / n_avg)
-                return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
+            def upd_flat(seg_grads, opt, n_avg):
+                # average in the bucket's own dtype (bf16 stays bf16 —
+                # jnp would otherwise promote against the f32 scalar);
+                # the per-leaf reference path divides identically
+                segs = tuple(g / n_avg.astype(g.dtype)
+                             for g in seg_grads)
+                return opt_mod.adam_update_flat(spec, segs, opt,
+                                                self.adam)
 
             out["update"] = jax.jit(upd_flat).lower(
-                jax.ShapeDtypeStruct((spec.size,), spec.dtype),
-                ospec, navg_spec).compile()
+                seg_specs, ospec, navg_spec).compile()
         else:
+            ospec = jax.eval_shape(opt_mod.init_opt_state, pspec)
+
             def upd(grads, opt, n_avg):
-                g = jax.tree.map(lambda x: x / n_avg, grads)
-                return opt_mod.adam_update(g, opt, self.adam, jnp.float32)
+                g = jax.tree.map(lambda x: x / n_avg.astype(x.dtype),
+                                 grads)
+                return opt_mod.adam_update(g, opt, self.adam,
+                                           param_dtype=None)
 
             out["update"] = jax.jit(upd).lower(
                 pspec, ospec, navg_spec).compile()
@@ -325,9 +377,44 @@ class PipelineEngine:
         chunk = batch[d * per_d:(d + 1) * per_d]
         return jnp.asarray(chunk[mb * self.mb_size:(mb + 1) * self.mb_size])
 
+    def _stage_params(self, m: Machine):
+        """A machine's live params, materialized lazily from its flat
+        segment buffers at the fwd/bwd boundary (leavers never pay
+        this). The update broadcasts ONE bucket tuple to every DP
+        replica, so materialization is cached per stage by bucket
+        identity — one jitted unflatten per stage per iteration, not
+        one per replica."""
+        # Memory model: the materialized tree is treated as ALIASING
+        # the buckets (on real hardware the unflatten is a view over
+        # the flat storage, which is the point of the flat layout), so
+        # the device ledger charges the state bytes once — the CPU-side
+        # copy jax makes here is a simulation artifact, not a modeled
+        # allocation.
+        p = m.payload.get("params")
+        if p is None:
+            s = m.payload["_seg_stage"]
+            segs = m.payload["param_segs"]
+            cached = self._mat_cache.get(s)
+            if cached is not None and cached[0] is segs:
+                p = cached[1]
+            else:
+                p = self.compile_role(s).fns["unflatten"](tuple(segs))
+                self._mat_cache[s] = (segs, p)
+            m.payload["params"] = p
+        return p
+
     def train_iteration(self, it: Optional[int] = None,
                         lane: str = "train") -> float:
-        """One synchronous iteration across the whole grid."""
+        """One synchronous iteration across the whole grid.
+
+        On the flat path, communication is overlap-aware: p2p
+        activation/grad transfers are issued onto their link's ledger
+        channel as the dataflow reaches them; each stage's gradbucket
+        all-reduce is issued as soon as the stage's grads are
+        accumulated (the final-microbatch backward wave is charged per
+        stage, earlier stages' backward hiding later stages'
+        in-flight reductions); waits charge only the exposed
+        remainder, and the iteration barrier settles any leftovers."""
         it = self.step_count if it is None else it
         comm = self.comm
         comm.reset_counters()
@@ -336,9 +423,11 @@ class PipelineEngine:
         slow = max(m.straggle_factor
                    for m in (self.cluster[mid] for mid in self.grid.values()))
         # compute-time charge (simulated cluster time, straggler-aware)
-        t_comp = 3 * self._stage_flops * self.nmb / \
+        t_comp = 3 * self._stage_flops * self.nmb * slow / \
             (FLOPS_PER_GPU * self.cluster[self.grid[(0, 0)]].gpus)
-        self.clock.advance(t_comp * slow, "compute", lane=lane)
+        overlap = self.use_flat_buffers
+        if not overlap:
+            self.clock.advance(t_comp, "compute", lane=lane)
 
         for d in range(self.dp):
             acts: Dict[Tuple[int, int], Any] = {}
@@ -351,10 +440,11 @@ class PipelineEngine:
                     if s > 0:
                         x = comm.p2p_recv(stage_role_key(s), "act",
                                           src=self.grid[(d, s - 1)],
-                                          dst=m.mid, value=x)
+                                          dst=m.mid, value=x,
+                                          overlap=overlap)
                     acts[(s, mb)] = x
                     if s < self.pp - 1:
-                        y = fns["fwd"](m.payload["params"], x)
+                        y = fns["fwd"](self._stage_params(m), x)
                         comm.p2p_send(stage_role_key(s), "act", m.mid,
                                       self.grid[(d, s + 1)], y)
                         x = y
@@ -365,13 +455,14 @@ class PipelineEngine:
                     fns = self.compile_role(s).fns
                     if s == self.pp - 1:
                         loss, dp_, dx = fns["last_bwd"](
-                            m.payload["params"], acts[(s, mb)], tokens)
+                            self._stage_params(m), acts[(s, mb)], tokens)
                         losses.append(float(loss))
                     else:
                         dy = comm.p2p_recv(stage_role_key(s), "grad",
                                            src=self.grid[(d, s + 1)],
-                                           dst=m.mid, value=dy)
-                        dp_, dx = fns["mid_bwd"](m.payload["params"],
+                                           dst=m.mid, value=dy,
+                                           overlap=overlap)
+                        dp_, dx = fns["mid_bwd"](self._stage_params(m),
                                                  acts[(s, mb)], dy)
                     if s > 0:
                         comm.p2p_send(stage_role_key(s), "grad", m.mid,
@@ -383,25 +474,64 @@ class PipelineEngine:
 
         # DP gradient all-reduce per stage + update
         navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
+        if self.use_flat_buffers:
+            self._flat_reduce_and_update(grads_acc, navg, it, t_comp,
+                                         lane)
+        else:
+            self._leaf_reduce_and_update(grads_acc, navg, it)
+        self.comm.barrier("iter")
+        self.step_count = it + 1
+        loss = float(np.mean(losses))
+        self.losses.append(loss)
+        return loss
+
+    def _flat_reduce_and_update(self, grads_acc, navg, it: int,
+                                t_comp: float, lane: str) -> None:
+        """Overlapped bucketed reduction + fully-flat Adam update.
+
+        Compute is charged in two parts: the bulk of the iteration
+        first (the in-flight p2p traffic hides under it), then the
+        final microbatch's backward wave stage by stage — issuing
+        stage s's bucket collectives right after its slice, so they
+        progress while stages s-1..0 still run backward. The update is
+        computed once per stage and the flat result broadcast to every
+        DP replica; params stay as buckets until the next fwd touches
+        them."""
+        # final-microbatch backward wave: one slice per stage (bwd is
+        # ~2/3 of a microbatch's fwd+bwd compute), clamped so the tail
+        # never exceeds the whole iteration's budget
+        t_bwd = min((2.0 / 3.0) * t_comp / self.nmb, t_comp / self.pp)
+        self.clock.advance(max(t_comp - self.pp * t_bwd, 0.0),
+                           "compute", lane=lane)
+        handles: Dict[int, List[Any]] = {}
+        for s in reversed(range(self.pp)):
+            self.clock.advance(t_bwd, f"compute:bwd_tail:{s}", lane=lane)
+            stacked = [grads_acc[(d, s)] for d in range(self.dp)]
+            segs = self.bucket_reduce_fn(s)(*stacked)
+            handles[s] = [
+                self.comm.all_reduce_async(stage_role_key(s),
+                                           "gradbucket", [seg],
+                                           participants=self.dp)
+                for seg in segs]
+        for s in reversed(range(self.pp)):       # wait in issue order
+            fns = self.compile_role(s).fns
+            reduced = tuple(self.comm.wait(h) for h in handles[s])
+            new_segs, new_opt, _ = fns["update"](
+                reduced, self.machine(0, s).payload["opt"], navg)
+            for d in range(self.dp):
+                m = self.machine(d, s)
+                m.payload["param_segs"] = new_segs
+                m.payload["params"] = None      # lazy: next fwd/bwd
+                m.payload["_seg_stage"] = s
+                m.payload["opt"] = new_opt
+                m.payload["step"] = it + 1
+
+    def _leaf_reduce_and_update(self, grads_acc, navg, it: int) -> None:
+        """Per-leaf reference path: one all_reduce per leaf, one Adam
+        update per DP rank (kept for bitwise parity testing)."""
         for s in range(self.pp):
             stacked = [grads_acc[(d, s)] for d in range(self.dp)]
             fns = self.compile_role(s).fns
-            if self.use_flat_buffers:
-                # ONE bucketed collective per stage (NCCL-style), then
-                # ONE Adam update broadcast to every DP replica — their
-                # opt states are identical by construction.
-                reduced = self.comm.all_reduce(
-                    stage_role_key(s), "gradbucket",
-                    [self.bucket_reduce_fn(s)(*stacked)],
-                    participants=self.dp)
-                new_p, new_opt, _ = fns["update"](
-                    reduced, self.machine(0, s).payload["opt"], navg)
-                for d in range(self.dp):
-                    m = self.machine(d, s)
-                    m.payload["params"] = new_p
-                    m.payload["opt"] = new_opt
-                    m.payload["step"] = it + 1
-                continue
             leaves0, tdef = jax.tree.flatten(stacked[0])
             reduced_leaves = []
             for li in range(len(leaves0)):
@@ -418,11 +548,6 @@ class PipelineEngine:
                 m.payload["params"] = new_p
                 m.payload["opt"] = new_opt
                 m.payload["step"] = it + 1
-        self.comm.barrier("iter")
-        self.step_count = it + 1
-        loss = float(np.mean(losses))
-        self.losses.append(loss)
-        return loss
 
     # ---------------------------------------------------- record / replay
     def record_iteration(self, it: Optional[int] = None) -> Tape:
@@ -434,6 +559,21 @@ class PipelineEngine:
         self.train_iteration(it)
         self.comm.mode = prev
         tape = self.comm.tape
+        # a shadow iteration replays exactly one microbatch, so the
+        # per-(replica, microbatch) p2p recordings collapse: middle
+        # stages fuse act+grad into one 'io' entry (one replay recv
+        # instead of two), first/last keep only the first entry per tag
+        freed, fused = 0, 0
+        for s in range(self.pp):
+            rk = stage_role_key(s)
+            df = tape.fuse_p2p_io(rk)
+            if df >= 0:
+                fused += 1
+                freed += df
+            else:
+                freed += tape.coalesce_p2p(rk)
+        tape.meta["p2p_fused_roles"] = fused
+        tape.meta["p2p_bytes_freed"] = freed
         reps = {"first": 0, "last": self.pp - 1,
                 "middle": 1 if self.pp > 2 else 0,
                 "only": 0}
@@ -466,26 +606,42 @@ class PipelineEngine:
                     dtype=jnp.float32)
                 params = jax.tree.map(
                     jnp.asarray,
-                    split_stage_params(full, stage, self.pp, self.cfg))
-                state = {"params": params,
-                         "opt": opt_mod.init_opt_state(params), "step": 0}
+                    self._cast_stage_params(split_stage_params(
+                        full, stage, self.pp, self.cfg)))
+                opt = (opt_mod.init_flat_opt_state(self.flat_spec(stage),
+                                                   params)
+                       if self.use_flat_buffers
+                       else opt_mod.init_opt_state(params))
+                state = {"params": params, "opt": opt, "step": 0}
             t0 = time.perf_counter()
             tokens = self._mb_tokens(0, 0, 0)
-            x = tokens if stage == 0 else self.comm.p2p_recv(
-                role_key, "act", src=-1, dst=machine.mid, value=None)
+            # middle stages replay ONE fused act+grad entry when the
+            # record step coalesced the tape (first/last have only one
+            # direction recorded, so they keep the per-tag entry)
+            fused = self.comm.tape.has((role_key, "p2p", "io", 0))
+            io = (self.comm.p2p_recv(role_key, "io", src=-1,
+                                     dst=machine.mid, value=None)
+                  if fused else None)
+            if stage == 0:
+                x = tokens
+            else:
+                x = io[0] if fused else self.comm.p2p_recv(
+                    role_key, "act", src=-1, dst=machine.mid, value=None)
             if stage == self.pp - 1:
                 _, dp_, _ = role.fns["last_bwd"](state["params"], x, tokens)
             else:
                 y = role.fns["fwd"](state["params"], x)
-                dy = self.comm.p2p_recv(role_key, "grad", src=-1,
-                                        dst=machine.mid, value=None)
+                dy = io[1] if fused else self.comm.p2p_recv(
+                    role_key, "grad", src=-1, dst=machine.mid, value=None)
                 dp_, _ = role.fns["mid_bwd"](state["params"], x, dy)
             navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
             if self.use_flat_buffers:
-                # one bucket entry replayed from the tape, not per-leaf
-                bucket = role.fns["flatten"](dp_)
-                reduced = self.comm.all_reduce(role_key, "gradbucket",
-                                               [bucket])
+                # per-dtype bucket entries replayed from the tape, not
+                # per-leaf (same keys the async issue wrote)
+                buckets = role.fns["flatten"](dp_)
+                reduced = tuple(
+                    self.comm.all_reduce(role_key, "gradbucket", [b])
+                    for b in buckets)
             else:
                 leaves = jax.tree.leaves(dp_)
                 red = [self.comm.all_reduce(role_key, f"grad{i}", [g])
@@ -505,6 +661,8 @@ class PipelineEngine:
     # ------------------------------------------------------- state moves
     def get_state(self, mid: int) -> dict:
         m = self.cluster[mid]
+        if self.use_flat_buffers:
+            self._stage_params(m)               # materialize if lazy
         return jax.tree.map(np.asarray,
                             {k: m.payload[k]
                              for k in ("params", "opt", "step")})
@@ -512,31 +670,74 @@ class PipelineEngine:
     def set_state(self, mid: int, state: dict) -> None:
         m = self.cluster[mid]
         m.payload.update(jax.tree.map(jnp.asarray, state))
+        if self.use_flat_buffers:
+            # params arrived in tree form; the stale buckets are
+            # rebuilt on demand (get_state_flat / the next update)
+            m.payload["param_segs"] = None
+
+    def opt_state_tree(self, d: int, s: int) -> dict:
+        """Optimizer state in per-leaf tree form (flat vectors are
+        unflattened through the stage spec) — parity tests and
+        inspection tooling use this to compare paths."""
+        opt = self.machine(d, s).payload["opt"]
+        if not self.use_flat_buffers:
+            return opt
+        spec = self.flat_spec(s)
+        return {k: spec.unflatten_master(opt[k])
+                for k in ("m", "v", "master")} | {"step": opt["step"]}
 
     def state_spec(self, stage: int) -> flatbuf.ByteSpec:
         """Byte layout of a stage's full train state (params + opt),
-        shared by every DP replica of that stage."""
+        shared by every DP replica of that stage. On the flat path the
+        layout is the already-flat buffers themselves — param segment
+        buckets plus the flat optimizer vectors — so packing is a
+        straight memcpy with no pytree walk."""
         if stage not in self._state_specs:
             pspec = self._stage_param_spec(stage)
-            self._state_specs[stage] = flatbuf.ByteSpec.from_tree(
-                {"params": pspec,
-                 "opt": jax.eval_shape(opt_mod.init_opt_state, pspec)})
+            if self.use_flat_buffers:
+                spec = self.flat_spec(stage)
+                tree = {"param_segs": tuple(
+                            jax.ShapeDtypeStruct((g.size,), g.dtype)
+                            for g in spec.segments),
+                        "opt": jax.eval_shape(
+                            lambda p: opt_mod.init_flat_opt_state(spec, p),
+                            pspec)}
+            else:
+                tree = {"params": pspec,
+                        "opt": jax.eval_shape(opt_mod.init_opt_state,
+                                              pspec)}
+            self._state_specs[stage] = flatbuf.ByteSpec.from_tree(tree)
         return self._state_specs[stage]
 
     def get_state_flat(self, mid: int) -> Tuple[np.ndarray, int]:
         """(contiguous uint8 state buffer, step) — the §8.5 transfer
-        unit: one buffer over the repurposed gradient channel."""
+        unit: one buffer over the repurposed gradient channel. Flat
+        path: a memcpy of the live 1-D buffers, params never
+        unflattened on the leaver."""
         d, s = self.coords_of(mid)
         m = self.cluster[mid]
-        buf = self.state_spec(s).pack({"params": m.payload["params"],
-                                       "opt": m.payload["opt"]})
+        if self.use_flat_buffers:
+            segs = m.payload.get("param_segs")
+            if segs is None:                    # tree-form restore
+                segs = self.flat_spec(s).flatten(m.payload["params"])
+            buf = self.state_spec(s).pack(
+                {"param_segs": tuple(segs), "opt": m.payload["opt"]})
+        else:
+            buf = self.state_spec(s).pack({"params": m.payload["params"],
+                                           "opt": m.payload["opt"]})
         return buf, int(m.payload["step"])
 
     def set_state_flat(self, mid: int, stage: int, buf: np.ndarray,
                        step: int) -> None:
         tree = self.state_spec(stage).unpack(buf)
         m = self.cluster[mid]
-        m.payload["params"] = jax.tree.map(jnp.asarray, tree["params"])
+        if self.use_flat_buffers:
+            m.payload["param_segs"] = tuple(
+                jnp.asarray(b) for b in tree["param_segs"])
+            m.payload["params"] = None          # lazy: next fwd/bwd
+            m.payload["_seg_stage"] = stage
+        else:
+            m.payload["params"] = jax.tree.map(jnp.asarray, tree["params"])
         m.payload["opt"] = jax.tree.map(jnp.asarray, tree["opt"])
         m.payload["step"] = step
 
@@ -553,5 +754,8 @@ class PipelineEngine:
             lm.status = NodeStatus.IDLE
 
     def state_bytes(self, mid: int) -> int:
-        return tree_bytes({k: self.cluster[mid].payload[k]
-                           for k in ("params", "opt")})
+        payload = self.cluster[mid].payload
+        params = payload["params"]
+        if params is None:                      # still in bucket form
+            params = payload["param_segs"]
+        return tree_bytes({"params": params, "opt": payload["opt"]})

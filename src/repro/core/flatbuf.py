@@ -8,16 +8,22 @@ flat shard is the unit of state management, which is what makes failover
 and elastic resharding almost free.  This module is that representation
 for the repro:
 
-  FlatSpec  - homogeneous-dtype view of a pytree as ONE 1-D array
-              (leaf offsets/shapes recorded once at setup).  Used for
-              the per-stage gradient bucket: microbatch accumulation is
-              a single vector add, the DP all-reduce is a single
-              collective, and the Adam update consumes the bucket
-              directly inside jit.
-  ByteSpec  - dtype-preserving byte packing of an arbitrary pytree into
-              one uint8 buffer.  Used by state_sync so the leaver ->
-              joiner transfer ships exactly one contiguous buffer over
-              the repurposed gradient channel (§8.5), bit-for-bit.
+  FlatSpec      - homogeneous-dtype view of a pytree as ONE 1-D array
+                  (leaf offsets/shapes recorded once at setup).
+  SegmentedSpec - per-dtype generalisation of FlatSpec: leaves are
+                  grouped into one contiguous 1-D segment per dtype
+                  (bf16 grads and fp32 reductions each get their own
+                  bucket), lifting FlatSpec's homogeneous-dtype
+                  restriction.  This is the engine's gradient-bucket
+                  layout AND the alignment for the fully-flat optimizer
+                  state: Adam moments/master live as flat vectors over
+                  the segment-major element space, so the update is a
+                  pure vector op and state transfer is a memcpy.
+  ByteSpec      - dtype-preserving byte packing of an arbitrary pytree
+                  into one uint8 buffer.  Used by state_sync so the
+                  leaver -> joiner transfer ships exactly one contiguous
+                  buffer over the repurposed gradient channel (§8.5),
+                  bit-for-bit.
 
 Both specs are built from shape metadata (eval_shape output works), so
 joiners can unpack buffers for roles they have never held.
@@ -84,6 +90,103 @@ class FlatSpec:
 
     def zeros(self) -> jnp.ndarray:
         return jnp.zeros((self.size,), self.dtype)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One contiguous same-dtype bucket inside a SegmentedSpec."""
+    dtype: Any
+    size: int                       # elements
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(self.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class SegmentedSpec:
+    """Per-dtype segmented view of a pytree: one contiguous 1-D bucket
+    per dtype (segment order = first appearance in leaf order).
+
+    The *master space* is the segment-major concatenation of all
+    segments (total `size` elements); flat optimizer vectors (Adam m/v,
+    fp32 master weights) are laid out in this space so they stay
+    aligned with the gradient buckets regardless of leaf dtypes.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    segments: Tuple[Segment, ...]
+    leaf_seg: Tuple[int, ...]       # per-leaf segment index
+    leaf_off: Tuple[int, ...]       # per-leaf offset within its segment
+    leaf_sizes: Tuple[int, ...]
+    size: int                       # total elements over all segments
+    nbytes: int
+
+    @classmethod
+    def from_tree(cls, tree) -> "SegmentedSpec":
+        treedef, shapes, dtypes = _leaf_meta(tree)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        seg_of: dict = {}               # dtype -> segment index
+        seg_sizes: list = []
+        leaf_seg, leaf_off = [], []
+        for dt, n in zip(dtypes, sizes):
+            if dt not in seg_of:
+                seg_of[dt] = len(seg_sizes)
+                seg_sizes.append(0)
+            si = seg_of[dt]
+            leaf_seg.append(si)
+            leaf_off.append(seg_sizes[si])
+            seg_sizes[si] += n
+        segments = tuple(Segment(dt, seg_sizes[si])
+                         for dt, si in sorted(seg_of.items(),
+                                              key=lambda kv: kv[1]))
+        total = sum(seg_sizes)
+        nbytes = sum(s.nbytes for s in segments)
+        return cls(treedef, shapes, dtypes, segments, tuple(leaf_seg),
+                   tuple(leaf_off), sizes, total, nbytes)
+
+    # ------------------------------------------------------------ layout
+    def leaf_views(self) -> Tuple[Tuple[int, int, int, Tuple], ...]:
+        """(segment_idx, offset, size, shape) per leaf, in the ORIGINAL
+        leaf order — the optimizer's per-leaf norm partials walk this to
+        stay bitwise-identical to the per-leaf reference path."""
+        return tuple(zip(self.leaf_seg, self.leaf_off, self.leaf_sizes,
+                         self.shapes))
+
+    def segment_bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """(lo, hi) of each segment in the master space."""
+        out, off = [], 0
+        for s in self.segments:
+            out.append((off, off + s.size))
+            off += s.size
+        return tuple(out)
+
+    # ------------------------------------------------------- conversions
+    def flatten(self, tree) -> Tuple[jnp.ndarray, ...]:
+        """Pytree -> per-dtype 1-D buckets (jnp; traceable inside jit)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        per_seg: list = [[] for _ in self.segments]
+        for leaf, si in zip(leaves, self.leaf_seg):
+            per_seg[si].append(jnp.ravel(leaf))
+        return tuple(jnp.concatenate(c) if c
+                     else jnp.zeros((0,), seg.dtype)
+                     for c, seg in zip(per_seg, self.segments))
+
+    def unflatten(self, bufs):
+        """Per-dtype buckets -> pytree (jnp; traceable inside jit)."""
+        leaves = [jnp.reshape(bufs[si][o:o + n], sh)
+                  for si, o, n, sh in self.leaf_views()]
+        return self.treedef.unflatten(leaves)
+
+    def unflatten_master(self, vec):
+        """Master-space vector (e.g. a flat Adam moment) -> pytree of
+        same-shaped leaves in the vector's dtype."""
+        bufs = [vec[lo:hi] for lo, hi in self.segment_bounds()]
+        return self.unflatten(bufs)
+
+    def zeros(self) -> Tuple[jnp.ndarray, ...]:
+        return tuple(jnp.zeros((s.size,), s.dtype) for s in self.segments)
 
 
 @dataclass(frozen=True)

@@ -72,6 +72,50 @@ class Tape:
                 n += 1
         return n
 
+    def coalesce_p2p(self, role_key) -> int:
+        """Drop every p2p entry beyond the first call index per tag for
+        one role. A shadow iteration replays exactly one microbatch, so
+        the idx>0 recordings (other replicas/microbatches of the record
+        iteration) are dead weight on the tape. Returns bytes freed."""
+        freed = 0
+        for k in list(self.entries):
+            if k[0] == role_key and k[1] == "p2p" and k[3] > 0:
+                freed += self.entries.pop(k).nbytes
+        return freed
+
+    def fuse_p2p_io(self, role_key) -> int:
+        """Fuse a role's first activation ('act') and gradient ('grad')
+        recv recordings into ONE stacked 'io' entry, dropping every
+        per-tag p2p entry for the role. Middle pipeline stages replay a
+        single fused recv instead of two; roles missing either tag
+        (first/last stages) are left to coalesce_p2p. Returns net bytes
+        freed (-1 if the role cannot fuse)."""
+        ka = (role_key, "p2p", "act", 0)
+        kg = (role_key, "p2p", "grad", 0)
+        if not (self.has(ka) and self.has(kg)):
+            return -1
+        if self.get(ka).shape != self.get(kg).shape:
+            return -1
+        fused = np.stack([self.get(ka), self.get(kg)])
+        freed = 0
+        for k in list(self.entries):
+            if k[0] == role_key and k[1] == "p2p" and k[2] in ("act",
+                                                               "grad"):
+                freed += self.entries.pop(k).nbytes
+        self.entries[(role_key, "p2p", "io", 0)] = fused
+        return freed - fused.nbytes
+
+
+@dataclass
+class AsyncResult:
+    """Handle returned by all_reduce_async: the reduced value is
+    available immediately (the math runs at issue time, as a CCL's
+    in-transport reduction does); the *sim charge* settles at wait(),
+    when only the exposed remainder hits the lane."""
+    key: Tuple
+    value: Any
+    clock_handle: Optional[int]     # None => nothing to charge (replay)
+
 
 class CommHooks:
     """The engine-facing collective interface with interception."""
@@ -106,27 +150,17 @@ class CommHooks:
         self._counters.clear()
         self.op_counts = {}
 
+    def _cost_seconds(self, nbytes: float, inter: bool,
+                      participants: int = 2) -> float:
+        bw = self.cost.bw_inter_node if inter else self.cost.bw_intra_node
+        return self.cost.collective_seconds(nbytes, bw, participants)
+
     def _charge(self, nbytes: float, inter: bool, name: str,
                 participants: int = 2) -> None:
-        """Latency + bandwidth charge for one collective launch.
-
-        Bucket-aware: a CCL splits a large contiguous buffer into
-        coalesce_bucket_bytes chunks pipelined back-to-back, so the
-        full RTT is paid once and each extra bucket only adds a launch
-        overhead — whereas N separate per-leaf calls each pay the RTT.
-        """
-        bw = self.cost.bw_inter_node if inter else self.cost.bw_intra_node
-        bucket = self.cost.coalesce_bucket_bytes
-        extra = 0.0
-        if bucket > 0 and nbytes > bucket:
-            n_buckets = int(np.ceil(nbytes / bucket))
-            extra = (n_buckets - 1) * self.cost.bucket_launch_overhead
-        if participants > 2:     # ring collective: 2(n-1)/n traversals
-            n = participants
-            t = self.cost.rtt_tcp + extra + 2 * (n - 1) / n * nbytes / bw
-        else:
-            t = self.cost.rtt_tcp + extra + nbytes / bw
-        self.clock.advance(t, name, lane=self.lane)
+        """Blocking latency + bandwidth charge for one collective
+        launch (formula: CostModel.collective_seconds)."""
+        self.clock.advance(self._cost_seconds(nbytes, inter, participants),
+                           name, lane=self.lane)
 
     # ------------------------------------------------------ collectives
     def all_reduce(self, role_key, tag: str, arrays: Sequence,
@@ -156,11 +190,56 @@ class CommHooks:
             self.record_bytes += np.asarray(out).nbytes
         return out
 
-    def p2p_recv(self, role_key, tag: str, src: int, dst: int, value):
+    def all_reduce_async(self, role_key, tag: str, arrays: Sequence,
+                         mid: Optional[int] = None,
+                         participants: Optional[int] = None) -> AsyncResult:
+        """Non-blocking all_reduce: same reduction, same tape keys and
+        op counters as the blocking form, but the sim charge goes onto
+        the per-(role) ring's ledger channel; wait() later charges only
+        the exposed remainder. RECORD writes the identical fused entry,
+        so shadow replays are oblivious to whether the engine issued
+        the collective sync or async."""
+        idx = self._next_idx(role_key, "all_reduce", tag)
+        key = (role_key, "all_reduce", tag, idx)
+        if self.mode == CommMode.REPLAY:
+            out = self.tape.get(key)
+            self.replay_bytes += out.nbytes
+            return AsyncResult(key, out, None)
+        out = arrays[0]
+        for a in arrays[1:]:
+            out = out + a
+        nb = getattr(arrays[0], "nbytes", None) or \
+            np.asarray(arrays[0]).nbytes
+        t = self._cost_seconds(nb, inter=True,
+                               participants=participants or len(arrays))
+        h = self.clock.issue_async(("allreduce", role_key), t,
+                                   f"allreduce:{tag}")
+        if self.mode == CommMode.RECORD:
+            self.tape.put(key, out)
+            self.record_bytes += np.asarray(out).nbytes
+        return AsyncResult(key, out, h)
+
+    def wait(self, handle: AsyncResult):
+        """Block on an async collective; charges the exposed remainder
+        to this hook's lane and returns the reduced value."""
+        if handle.clock_handle is not None:
+            self.clock.wait_async(handle.clock_handle, lane=self.lane)
+        return handle.value
+
+    def drain(self) -> float:
+        """Settle every still-pending ledger op (e.g. overlapped p2p
+        recvs that nothing explicitly waited on)."""
+        return self.clock.drain_async(lane=self.lane)
+
+    def p2p_recv(self, role_key, tag: str, src: int, dst: int, value,
+                 overlap: bool = False):
         """Receive `value` sent by src. In REPLAY mode, if src is
         outside the sandbox, the recorded tensor is served instead; if
         src is inside (batch migration), the live value passes through
-        (§4.3)."""
+        (§4.3). With overlap=True the transfer is issued on the link's
+        ledger channel ((src, dst) — full duplex, so each direction is
+        its own stream) instead of blocking the lane; the barrier at
+        the end of the iteration settles whatever stayed exposed."""
         idx = self._next_idx(role_key, "p2p", tag)
         key = (role_key, "p2p", tag, idx)
         if self.mode == CommMode.REPLAY:
@@ -169,7 +248,12 @@ class CommHooks:
             self.replay_bytes += self.tape.get(key).nbytes
             return self.tape.get(key)
         nb = getattr(value, "nbytes", None) or np.asarray(value).nbytes
-        self._charge(nb, inter=True, name=f"p2p:{tag}")
+        if overlap:
+            self.clock.issue_async(("p2p", src, dst),
+                                   self._cost_seconds(nb, inter=True),
+                                   f"p2p:{tag}")
+        else:
+            self._charge(nb, inter=True, name=f"p2p:{tag}")
         if self.mode == CommMode.RECORD:
             self.tape.put(key, value)
             self.record_bytes += nb
@@ -183,7 +267,10 @@ class CommHooks:
         return
 
     def barrier(self, tag: str = "") -> None:
+        """Iteration barrier: all in-flight comm must have completed,
+        so the ledger is drained (exposing any remainder) first."""
         if self.mode == CommMode.REPLAY:
             return
+        self.drain()
         self.clock.advance(self.cost.rtt_tcp * 2, f"barrier:{tag}",
                            lane=self.lane)

@@ -61,6 +61,11 @@ def prepare_general_standby(engine: PipelineEngine, machine: Machine,
     # retain the dominant role's sandbox state (middle, or last resort)
     retained = "middle" if "middle" in roles else roles[0]
     rep.retained_role = retained
+    # pre-allocate the gradient bucket for the worst-case role now, off
+    # the critical path — promotion's state sync then skips the alloc
+    grad_bytes = max(engine.grad_buffer_bytes(representative_stage(rt, pp))
+                     for rt in roles)
+    machine.device.alloc(grad_bytes, "grad_buffer", clock.now)
     # bootstrap/topology prep with the whole job (host memory only)
     n = len(engine.grid)
     clock.advance(cost.bootstrap(n) + cost.topo_discovery(n) * 0.2,

@@ -26,6 +26,10 @@ class TransferReport:
     seconds: float
     path: str                   # leaver | neighbor | storage
     joiner_peak_delta: float    # device-memory overhead observed (bytes)
+    # how the buffer was assembled: "flat-memcpy" when the engine's
+    # state already lives as 1-D buckets/vectors (fully-flat optimizer
+    # path), "per-leaf-pack" when a pytree walk built it
+    packing: str = "per-leaf-pack"
 
 
 def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
@@ -37,7 +41,10 @@ def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
     The transfer unit is the leaver's packed flat state buffer
     (core/flatbuf.ByteSpec): ONE contiguous buffer shipped over the
     repurposed gradient-bucket channel — the §8.5 choreography made
-    literal, with a single RTT instead of one per state leaf."""
+    literal, with a single RTT instead of one per state leaf. With the
+    fully-flat optimizer path the pack degenerates to a memcpy: param
+    segment buckets and flat Adam vectors are already contiguous, and
+    the joiner defers unflattening params to its first fwd/bwd."""
     cl: Cluster = engine.cluster
     lm, jm = cl[leaver], cl[joiner]
     stage = engine.coords_of(leaver)[1]
@@ -60,12 +67,21 @@ def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
     engine.set_state_flat(joiner, stage, buf, step)   # the real copy
     grad_bytes = engine.grad_buffer_bytes(stage)
     jm.device.alloc(nbytes, "train_state", clock.now)
-    jm.device.alloc(grad_bytes, "grad_buffer", clock.now)
+    # a general standby pre-allocated its bucket during preparation —
+    # only a grad_buffer actually allocated HERE is excluded from the
+    # joiner's overhead below
+    grad_alloced = 0.0
+    if jm.device.tagged("grad_buffer") == 0:
+        jm.device.alloc(grad_bytes, "grad_buffer", clock.now)
+        grad_alloced = grad_bytes
     # tear the channel down before phase 2 completes
     jm.device.free("xfer_channel", clock.now)
     lm.device.free("xfer_channel", clock.now)
-    peak_delta = jm.device.peak - baseline_peak - nbytes - grad_bytes
-    return TransferReport(nbytes, t, "leaver", max(peak_delta, 0.0))
+    peak_delta = jm.device.peak - baseline_peak - nbytes - grad_alloced
+    packing = ("flat-memcpy" if getattr(engine, "use_flat_buffers", False)
+               else "per-leaf-pack")
+    return TransferReport(nbytes, t, "leaver", max(peak_delta, 0.0),
+                          packing)
 
 
 def recover_state(engine, failed: int, joiner: int,
@@ -96,5 +112,9 @@ def recover_state(engine, failed: int, joiner: int,
     clock.advance(t, f"state_recover:{failed}->{joiner}", lane=lane)
     engine.set_state(joiner, state)
     jm.device.alloc(nbytes, "train_state", clock.now)
-    jm.device.alloc(tree_bytes(state["params"]), "grad_buffer", clock.now)
+    # a general standby pre-allocated its gradient bucket during
+    # preparation (off the critical path); only cold joiners alloc here
+    if jm.device.tagged("grad_buffer") == 0:
+        jm.device.alloc(tree_bytes(state["params"]), "grad_buffer",
+                        clock.now)
     return TransferReport(nbytes, t, path, 0.0), step

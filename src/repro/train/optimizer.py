@@ -51,7 +51,10 @@ def global_norm(tree) -> jax.Array:
 
 def adam_update(grads, opt_state: dict, cfg: AdamCfg,
                 param_dtype=jnp.bfloat16):
-    """Returns (new_params, new_opt_state, stats)."""
+    """Returns (new_params, new_opt_state, stats).
+
+    param_dtype=None preserves each leaf's own dtype (mixed-precision
+    stages: bf16 stack weights next to fp32 norms/embeddings)."""
     step = opt_state["step"] + 1
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
@@ -81,10 +84,74 @@ def adam_update(grads, opt_state: dict, cfg: AdamCfg,
     new_m = tdef.unflatten([o[0] for o in out])
     new_v = tdef.unflatten([o[1] for o in out])
     new_master = tdef.unflatten([o[2] for o in out])
-    new_params = jax.tree.map(lambda x: x.astype(param_dtype), new_master)
+    if param_dtype is None:         # keep each leaf's own precision
+        new_params = jax.tree.map(lambda x, g: x.astype(g.dtype),
+                                  new_master, grads)
+    else:
+        new_params = jax.tree.map(lambda x: x.astype(param_dtype),
+                                  new_master)
     new_state = {"m": new_m, "v": new_v, "master": new_master,
                  "step": step}
     return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------ fully-flat hot path
+# FFTrainer-style (arXiv 2512.03644): the optimizer state lives as flat
+# vectors aligned to the gradient bucket's segment-major element space,
+# so the update is pure vector arithmetic with no unflatten/flatten
+# inside jit and leaver->joiner state packing is a memcpy.  Every step
+# below mirrors adam_update's per-leaf arithmetic elementwise (same op
+# order, same scalar schedule, per-leaf norm partials in leaf order),
+# which is what keeps the two paths bitwise identical.
+
+def init_flat_opt_state(spec, params) -> dict:
+    """Flat m/v/master vectors over `spec`'s master space."""
+    segs = spec.flatten(params)
+    master = (jnp.concatenate([s.astype(jnp.float32) for s in segs])
+              if segs else jnp.zeros((0,), jnp.float32))
+    return {
+        "m": jnp.zeros((spec.size,), jnp.float32),
+        "v": jnp.zeros((spec.size,), jnp.float32),
+        "master": master,
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update_flat(spec, grad_segs, opt_state: dict, cfg: AdamCfg):
+    """AdamW over per-dtype gradient buckets; returns
+    (new_param_segments, new_opt_state, stats).
+
+    grad_segs are `spec.flatten` outputs (already averaged). The norm
+    is accumulated from per-leaf partials in the original leaf order —
+    reshaped to the leaf shapes — because that is exactly what
+    global_norm does on the unflattened tree; everything else is
+    elementwise and runs on the whole vector at once."""
+    step = opt_state["step"] + 1
+    views = [jnp.reshape(grad_segs[si][o:o + n], sh)
+             for si, o, n, sh in spec.leaf_views()]
+    gnorm = global_norm(views)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    g = (jnp.concatenate([s.astype(jnp.float32) for s in grad_segs])
+         if grad_segs else jnp.zeros((0,), jnp.float32)) * scale
+    m = cfg.b1 * opt_state["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * opt_state["v"] + (1 - cfg.b2) * g * g
+    mhat = m / b1c
+    vhat = v / b2c
+    delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    master = opt_state["master"]
+    if cfg.weight_decay:
+        delta = delta + cfg.weight_decay * master
+    master = master - lr * delta
+    new_segs = tuple(master[lo:hi].astype(seg.dtype)
+                     for seg, (lo, hi) in zip(spec.segments,
+                                              spec.segment_bounds()))
+    new_state = {"m": m, "v": v, "master": master, "step": step}
+    return new_segs, new_state, {"grad_norm": gnorm, "lr": lr}
 
 
 # -------------------------------------------------- ZeRO-1 sharding rule

@@ -63,6 +63,23 @@ def sampled_from(elements: Sequence) -> SearchStrategy:
                           f"sampled_from({elements!r})")
 
 
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10, **_kw) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_P:
+            n = rng.choice((min_size, max_size))
+        else:
+            n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw, f"lists({elements.label})")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw(rng) for s in strategies),
+        f"tuples({', '.join(s.label for s in strategies)})")
+
+
 def permutations(values: Sequence) -> SearchStrategy:
     values = list(values)
 
@@ -151,7 +168,7 @@ def install() -> None:
     hyp = types.ModuleType("hypothesis")
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
-                 "permutations", "just", "composite"):
+                 "permutations", "just", "composite", "lists", "tuples"):
         setattr(strat, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

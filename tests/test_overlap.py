@@ -1,0 +1,184 @@
+"""Async-collective ledger + overlap-aware charging (fast, no XLA):
+SimClock channel semantics, CommHooks async issue/wait, tape key
+compatibility between sync and async all-reduce, and the coalesced /
+fused p2p tape entries."""
+import numpy as np
+import pytest
+
+from repro.cluster.costmodel import DEFAULT, CostModel
+from repro.cluster.simclock import SimClock
+from repro.core.sandbox import CommHooks, CommMode, Tape
+
+
+# ----------------------------------------------------------- SimClock
+def test_exposed_is_cost_minus_elapsed():
+    c = SimClock()
+    h = c.issue_async("ch", 1.0, "xfer")
+    c.advance(0.4, "compute")
+    exposed = c.wait_async(h)
+    assert exposed == pytest.approx(0.6)
+    assert c.comm_hidden == pytest.approx(0.4)
+    assert c.now == pytest.approx(1.0)
+
+
+def test_fully_hidden_op_charges_nothing():
+    c = SimClock()
+    h = c.issue_async("ch", 0.5, "xfer")
+    before_phases = len(c.phases)
+    c.advance(2.0, "compute")
+    assert c.wait_async(h) == 0.0
+    assert c.comm_hidden == pytest.approx(0.5)
+    # no zero-duration exposure phase is appended
+    assert [p.name for p in c.phases[before_phases:]] == ["compute"]
+    assert c.overlap_fraction() == 1.0
+
+
+def test_same_channel_serializes_different_channels_overlap():
+    c = SimClock()
+    h1 = c.issue_async("a", 1.0, "one")
+    h2 = c.issue_async("a", 1.0, "two")      # queues behind h1
+    h3 = c.issue_async("b", 1.5, "three")    # own channel, concurrent
+    c.wait_async(h1)
+    assert c.now == pytest.approx(1.0)
+    c.wait_async(h2)
+    assert c.now == pytest.approx(2.0)       # serialized on channel a
+    assert c.wait_async(h3) == 0.0           # finished under a's queue
+    assert c.comm_hidden == pytest.approx(1.5)
+
+
+def test_drain_settles_everything_at_slowest_channel():
+    c = SimClock()
+    for i in range(4):
+        c.issue_async(("p2p", i), 1.0, f"p{i}")
+    total = c.drain_async()
+    assert c.pending_async() == 0
+    assert c.now == pytest.approx(1.0)       # channels ran concurrently
+    assert total == pytest.approx(1.0)
+    assert c.comm_hidden == pytest.approx(3.0)
+    # double-wait after a drain is a no-op
+    assert c.wait_async(0) == 0.0
+
+
+def test_exposed_lane_accounting():
+    c = SimClock()
+    h = c.issue_async("ch", 2.0, "xfer")
+    c.wait_async(h, lane="train")
+    assert c.lane_total("train") == pytest.approx(2.0)
+    assert c.phases[-1].name == "exposed:xfer"
+
+
+# ---------------------------------------------------------- CostModel
+def test_collective_seconds_matches_legacy_formula():
+    cost = DEFAULT
+    nb = 100 * 2 ** 20
+    t = cost.collective_seconds(nb, cost.bw_inter_node, participants=4)
+    n_buckets = int(np.ceil(nb / cost.coalesce_bucket_bytes))
+    expect = (cost.rtt_tcp + (n_buckets - 1) * cost.bucket_launch_overhead
+              + 2 * 3 / 4 * nb / cost.bw_inter_node)
+    assert t == pytest.approx(expect)
+    # 2-party path: plain latency + bandwidth
+    t2 = cost.collective_seconds(1024, cost.bw_inter_node)
+    assert t2 == pytest.approx(cost.rtt_tcp + 1024 / cost.bw_inter_node)
+
+
+# ---------------------------------------------------------- CommHooks
+def test_async_all_reduce_same_value_and_tape_keys_as_sync():
+    sync = CommHooks(SimClock(), mode=CommMode.RECORD)
+    asy = CommHooks(SimClock(), mode=CommMode.RECORD)
+    arrs = [np.arange(4.0), np.ones(4)]
+    out_sync = sync.all_reduce(0, "gradbucket", arrs)
+    h = asy.all_reduce_async(0, "gradbucket", arrs)
+    out_async = asy.wait(h)
+    np.testing.assert_array_equal(out_sync, out_async)
+    assert set(sync.tape.entries) == set(asy.tape.entries)
+    assert asy.op_counts["all_reduce"] == 1
+    np.testing.assert_array_equal(
+        asy.tape.get((0, "all_reduce", "gradbucket", 0)), out_sync)
+
+
+def test_async_all_reduce_overlaps_with_compute():
+    clock = SimClock()
+    comm = CommHooks(clock)
+    big = np.zeros(2 ** 20, np.float32)
+    h = comm.all_reduce_async(0, "gradbucket", [big], participants=4)
+    cost = comm._cost_seconds(big.nbytes, inter=True, participants=4)
+    clock.advance(cost * 10, "backward")     # next stage's backward
+    t0 = clock.now
+    comm.wait(h)
+    assert clock.now == t0                   # fully hidden
+    assert clock.comm_hidden == pytest.approx(cost)
+
+
+def test_async_all_reduce_replay_serves_tape():
+    tape = Tape()
+    tape.put((0, "all_reduce", "gradbucket", 0), np.full(3, 7.0))
+    clock = SimClock()
+    comm = CommHooks(clock, tape=tape, mode=CommMode.REPLAY)
+    h = comm.all_reduce_async(0, "gradbucket", [np.zeros(3)])
+    out = comm.wait(h)
+    np.testing.assert_array_equal(out, np.full(3, 7.0))
+    assert clock.now == 0.0                  # replay charges nothing
+    assert comm.replay_bytes == out.nbytes
+
+
+def test_overlapped_p2p_settles_at_barrier():
+    clock = SimClock()
+    comm = CommHooks(clock)
+    v = np.zeros(1024, np.float32)
+    comm.p2p_recv(0, "act", src=1, dst=2, value=v, overlap=True)
+    comm.p2p_recv(0, "act", src=3, dst=4, value=v, overlap=True)
+    assert clock.now == 0.0                  # nothing charged yet
+    assert clock.pending_async() == 2
+    comm.barrier("iter")
+    assert clock.pending_async() == 0
+    cost = comm._cost_seconds(v.nbytes, inter=True)
+    # the two links ran concurrently: one exposed cost + barrier
+    assert clock.now == pytest.approx(cost + 2 * comm.cost.rtt_tcp)
+    assert clock.comm_hidden == pytest.approx(cost)
+
+
+def test_blocking_p2p_unchanged():
+    clock = SimClock()
+    comm = CommHooks(clock)
+    v = np.zeros(1024, np.float32)
+    comm.p2p_recv(0, "act", src=1, dst=2, value=v)
+    assert clock.now == pytest.approx(
+        comm._cost_seconds(v.nbytes, inter=True))
+    assert clock.pending_async() == 0
+
+
+# --------------------------------------------------------------- Tape
+def test_tape_coalesce_p2p_keeps_first_entry_per_tag():
+    tape = Tape()
+    for i in range(4):
+        tape.put((1, "p2p", "act", i), np.full(8, float(i)))
+        tape.put((1, "p2p", "grad", i), np.full(8, float(10 + i)))
+    tape.put((0, "p2p", "act", 1), np.ones(8))   # other role untouched
+    before = tape.nbytes()
+    freed = tape.coalesce_p2p(1)
+    assert freed == 6 * 8 * 8
+    assert tape.nbytes() == before - freed
+    assert tape.has((1, "p2p", "act", 0)) and tape.has((1, "p2p",
+                                                        "grad", 0))
+    assert not tape.has((1, "p2p", "act", 1))
+    assert tape.has((0, "p2p", "act", 1))
+
+
+def test_tape_fuse_p2p_io_stacks_act_and_grad():
+    tape = Tape()
+    act, grad = np.arange(6.0).reshape(2, 3), np.ones((2, 3))
+    for i in range(3):
+        tape.put((1, "p2p", "act", i), act + i)
+        tape.put((1, "p2p", "grad", i), grad + i)
+    freed = tape.fuse_p2p_io(1)
+    # 6 entries dropped, 1 stacked pair added back
+    assert freed == 6 * act.nbytes - 2 * act.nbytes
+    keys = [k for k in tape.entries if k[0] == 1]
+    assert keys == [(1, "p2p", "io", 0)]         # ONE fused entry
+    io = tape.get((1, "p2p", "io", 0))
+    np.testing.assert_array_equal(io[0], act)
+    np.testing.assert_array_equal(io[1], grad)
+    # roles missing one direction don't fuse
+    tape.put((2, "p2p", "act", 0), act)
+    assert tape.fuse_p2p_io(2) == -1
+    assert tape.has((2, "p2p", "act", 0))

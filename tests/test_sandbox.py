@@ -76,6 +76,34 @@ def test_replay_determinism(engine):
     np.testing.assert_array_equal(a, t.get(key))
 
 
+@engine_test
+def test_middle_stage_replays_one_fused_io_entry():
+    """pp>=3: record fuses a middle stage's act+grad recvs into one
+    'io' tape entry; the shadow iteration replays it with a single
+    recv, and the fused entry is aliased to the 'middle' role type."""
+    cluster = Cluster(6, device_capacity=16 * 2 ** 30)
+    clock = SimClock()
+    comm = CommHooks(clock)
+    eng = PipelineEngine(CFG, dp=1, pp=4, global_batch=4, seq_len=32,
+                         cluster=cluster, clock=clock, comm=comm,
+                         micro_batches=2)
+    eng.setup(list(range(4)))
+    tape = eng.record_iteration()
+    assert tape.meta["p2p_fused_roles"] == 2      # stages 1 and 2
+    assert tape.meta["p2p_bytes_freed"] > 0       # first/last coalesced
+    for rk in (1, 2, "middle"):
+        assert tape.has((rk, "p2p", "io", 0))
+        assert not tape.has((rk, "p2p", "act", 0))
+    jm = eng.cluster[5]
+    comm.reset_counters()
+    eng.comm.replay_bytes = 0
+    eng.shadow_iteration(jm, 2, 2)
+    assert comm.op_counts["p2p"] == 1             # ONE fused recv
+    assert eng.comm.replay_bytes >= eng.flat_spec(2).nbytes
+    # training continues normally after the record+coalesce step
+    assert not np.isnan(eng.train_iteration())
+
+
 def test_tape_role_alias_dedup():
     tape = Tape()
     tape.put((0, "p2p", "act", 0), np.ones(4))
