@@ -1,0 +1,62 @@
+"""Interruption-scenario campaign: downtime accounting vs baselines.
+
+Runs the declarative fault-injection matrix (core/campaign.py) over
+the real-exec engine — every interruption kind x role x timing x
+recovery path — and writes BENCH_downtime.json plus the markdown
+downtime table (BENCH_downtime.md) at the repo root, reproducing the
+paper's constant-downtime figure shape: standby-recovery downtime is
+flat across scenarios while the full-reinit baseline is an order of
+magnitude above it.
+
+Invoked directly, the full matrix runs by default and ``--reduced``
+selects the one-scenario-per-code-path subset (the push-CI profile);
+through ``benchmarks.run`` the reduced subset runs, keeping the sweep
+usable (the full matrix is the nightly campaign CI job).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import emit
+from repro.core import campaign
+
+
+def run(reduced: bool = True) -> None:
+    cfg = campaign.CampaignCfg()
+    matrix = (campaign.reduced_matrix(cfg.dp, cfg.pp) if reduced
+              else campaign.default_matrix(cfg.dp, cfg.pp))
+    payload = campaign.run_campaign(matrix, cfg)
+    json_path = os.path.join(_ROOT, "BENCH_downtime.json")
+    md_path = os.path.join(_ROOT, "BENCH_downtime.md")
+    campaign.write_outputs(payload, json_path, md_path)
+
+    rows = [{k: r[k] for k in ("name", "timing", "recovery",
+                               "downtime_per_event_s",
+                               "lost_iterations", "loss_parity")}
+            for r in payload["scenarios"]]
+    emit(rows, "interruption campaign (downtime per event)")
+    s = payload["summary"]
+    print(f"campaign,{s['standby_downtime_median_s'] * 1e6:.1f},"
+          f"scenarios={s['n_scenarios']}"
+          f";flat_within={s['standby_flat_within']:.2f}"
+          f";reinit_over={s['full_reinit_over_median']:.1f}"
+          f";parity={s['all_loss_parity']}")
+    assert s["all_loss_parity"], "a scenario diverged from the reference"
+    assert s["flat_claim_ok"], s
+    if not reduced:
+        assert s["n_scenarios"] >= 20, s["n_scenarios"]
+    print(f"BENCH_downtime.json written -> {json_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="run the reduced (push-CI) scenario subset")
+    run(ap.parse_args().reduced)

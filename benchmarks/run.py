@@ -12,6 +12,7 @@ sys.path.insert(0, "src")
 
 MODULES = [
     "iter_throughput",
+    "campaign_downtime",
     "table1_restart",
     "table2_ccl_setup",
     "fig08_downtime_scale",

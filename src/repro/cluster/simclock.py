@@ -53,6 +53,11 @@ class SimClock:
         self._next_handle = 0
         self.comm_exposed = 0.0   # ledger seconds charged to a lane
         self.comm_hidden = 0.0    # ledger seconds hidden under other work
+        # per-channel breakdown (invariant: once a channel has no
+        # in-flight ops, issued == exposed + hidden for that channel)
+        self.issued_by_channel: Dict[Any, float] = {}
+        self.exposed_by_channel: Dict[Any, float] = {}
+        self.hidden_by_channel: Dict[Any, float] = {}
 
     def advance(self, seconds: float, name: str = "",
                 lane: str = "train") -> None:
@@ -74,6 +79,8 @@ class SimClock:
         self._next_handle += 1
         self._inflight[h] = AsyncOp(h, channel, name, self.now, seconds,
                                     ready)
+        self.issued_by_channel[channel] = \
+            self.issued_by_channel.get(channel, 0.0) + seconds
         return h
 
     def wait_async(self, handle: int, lane: str = "train") -> float:
@@ -85,8 +92,13 @@ class SimClock:
         if op is None:
             return 0.0
         exposed = max(0.0, op.ready_at - self.now)
+        hidden = op.cost - exposed
         self.comm_exposed += exposed
-        self.comm_hidden += max(0.0, op.cost - exposed)
+        self.comm_hidden += hidden
+        self.exposed_by_channel[op.channel] = \
+            self.exposed_by_channel.get(op.channel, 0.0) + exposed
+        self.hidden_by_channel[op.channel] = \
+            self.hidden_by_channel.get(op.channel, 0.0) + hidden
         if exposed > 0:
             self.advance(exposed, f"exposed:{op.name}", lane=lane)
         return exposed

@@ -9,17 +9,19 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.cluster.costmodel import CostModel, DEFAULT
 from repro.cluster.node import Cluster, Machine, NodeStatus
 from repro.cluster.simclock import SimClock
+from repro.core import baselines
 from repro.core import standby as standby_mod
 from repro.core import state_sync
 from repro.core import two_phase
-from repro.core.engine import PipelineEngine, stage_role_key, stage_type
+from repro.core.engine import (IterationInterrupt, PipelineEngine,
+                               stage_role_key, stage_type)
 from repro.core.groups import CommGroup, GroupState, compute_delta_plan
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
 
@@ -52,7 +54,8 @@ class Controller:
     def __init__(self, engine: PipelineEngine,
                  cost: CostModel = DEFAULT, standby_count: int = 1,
                  per_iteration_ckpt: bool = True,
-                 storage_bw: float = 0.0):
+                 storage_bw: float = 0.0,
+                 seed: Optional[int] = None):
         self.engine = engine
         self.cluster: Cluster = engine.cluster
         self.clock: SimClock = engine.clock
@@ -60,6 +63,12 @@ class Controller:
         self.standby_count = standby_count
         self.per_iteration_ckpt = per_iteration_ckpt
         self.storage_bw = storage_bw
+        # one seed governs the whole run; the engine's seed is the one
+        # that feeds the data stream and param init, so an explicit
+        # controller seed must agree — ScenarioResult records it as the
+        # run's determinism provenance
+        assert seed is None or seed == engine.seed, (seed, engine.seed)
+        self.seed = engine.seed
         self.imc = InMemoryCheckpoint()
         self.storage: Dict[int, Tuple[int, dict]] = {}
         self.standbys: List[int] = []
@@ -116,8 +125,16 @@ class Controller:
     # ----------------------------------------------- expected interruption
     def expected_migration(self, leavers: List[int],
                            joiners: Optional[List[int]] = None,
-                           train_during_prep: int = 0) -> MigrationReport:
-        """Live migration with advance notice (§3 steps 1-3)."""
+                           train_during_prep: int = 0,
+                           on_prepared: Optional[Callable] = None
+                           ) -> MigrationReport:
+        """Live migration with advance notice (§3 steps 1-3).
+
+        `on_prepared(controller)` fires after the preparation phase but
+        before the switching phase — the seam where a cascading event
+        (e.g. an unexpected failure handled while this migration was in
+        flight) can land; any affected group whose pending plan the
+        cascade invalidated is re-prepared before switching."""
         rep = MigrationReport("expected")
         joiners = joiners or self._alloc_joiners(len(leavers))
         pairing = dict(zip(leavers, joiners))
@@ -143,6 +160,9 @@ class Controller:
         for _ in range(train_during_prep):   # foreground keeps training
             self.engine.train_iteration()
             self._tick_checkpoints()
+        if on_prepared is not None:
+            on_prepared(self)
+            self._reprepare_stale(affected, pairing)
         rep.overlap = self.clock.now - t_prep0
 
         # ---- switching phase (downtime) ----
@@ -180,8 +200,13 @@ class Controller:
 
     # --------------------------------------------- unexpected interruption
     def unexpected_failure(self, failed: int,
-                           use_standby: bool = True) -> MigrationReport:
-        """Failure -> detect -> promote standby -> switch (§3 a-c)."""
+                           use_standby: bool = True,
+                           dirty: bool = False) -> MigrationReport:
+        """Failure -> detect -> promote standby -> switch (§3 a-c).
+
+        dirty=True marks a mid-iteration abort that already mutated
+        stayer payloads (post-update): every stayer rolls back to the
+        last checkpoint even when the step counter never advanced."""
         rep = MigrationReport("unexpected")
         d, s = self.engine.coords_of(failed)
         fm = self.cluster[failed]
@@ -208,7 +233,7 @@ class Controller:
             role = self.engine.shadow_iteration(
                 jm, stage_role_key(s), s, lane="downtime",
                 fresh_compile=True)
-            rep.promote_s = role.compile_seconds
+            rep.promote_s = self.engine.compile_charge(role)
         rep.pairs = {failed: j}
         affected = self._affected_groups([failed])
         if used_standby:
@@ -242,7 +267,7 @@ class Controller:
 
         # stayers roll back to the same checkpoint step (local/in-mem)
         rep.lost_iterations = max(self.engine.step_count - step, 0)
-        if rep.lost_iterations:
+        if rep.lost_iterations or dirty:
             rb = 0.0
             for mid in self._training_mids():
                 if mid == failed:
@@ -262,6 +287,122 @@ class Controller:
         rep.qps_added = sum(r.qps_added for r in p2)
         rep.qps_inherited = sum(r.qps_inherited for r in p2)
         self.engine.swap_machine(failed, j)
+        rep.downtime = self.clock.now - t0
+        self.reports.append(rep)
+        return rep
+
+    def _reprepare_stale(self, affected: List[CommGroup],
+                         pairing: Dict[int, int]) -> None:
+        """Re-run phase 1 for any group whose pending plan a cascade
+        invalidated (an unexpected failure handled mid-migration
+        switches shared groups over and drops their staged plans)."""
+        for g in affected:
+            sub = {l: pairing[l] for l in g.members if l in pairing}
+            if not sub:
+                continue
+            intact = (g.pending_plan is not None
+                      and g.pending_plan.replace == sub
+                      and g.state in (GroupState.READY_TO_SWITCHOUT,
+                                      GroupState.PREPARING))
+            if intact:
+                continue
+            two_phase.ccl_prepare_stayers(g, sub, self.cluster,
+                                          self.clock, self.cost)
+            two_phase.ccl_prepare_joiners(g, sub, self.cluster,
+                                          self.clock, self.cost)
+
+    def interrupt_iteration(self, victim: int, phase: str,
+                            use_standby: bool = True) -> MigrationReport:
+        """Mid-iteration failure: arm a one-shot interrupt at `phase`
+        ("pre_reduce" | "post_reduce"), run the iteration until it
+        fires, then recover. An aborted iteration commits nothing; a
+        post_reduce abort additionally rolls every stayer back to the
+        last checkpoint, so the re-run is bitwise-identical to an
+        uninterrupted run."""
+        self.engine.arm_interrupt(phase, victim)
+        try:
+            self.engine.train_iteration()
+        except IterationInterrupt as intr:
+            # in-flight collectives die with the iteration; the ledger
+            # settles inside the downtime window, before detection
+            drained = self.clock.drain_async(lane="downtime")
+            rep = self.unexpected_failure(victim, use_standby=use_standby,
+                                          dirty=intr.dirty)
+            rep.kind = f"unexpected@{phase}"
+            rep.downtime += drained
+            return rep
+        raise RuntimeError(f"interrupt at {phase} never fired")
+
+    def standby_failure(self, standby: Optional[int] = None
+                        ) -> MigrationReport:
+        """The interruption hits the standby itself: training never
+        stops (zero downtime); a replacement standby is prepared from
+        the elastic pool, overlapped with training."""
+        rep = MigrationReport("standby_loss")
+        assert self.standbys, "standby_failure needs a live standby"
+        mid = standby if standby is not None else self.standbys[0]
+        self.standbys.remove(mid)
+        self.cluster[mid].fail()
+        t0 = self.clock.now
+        free = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
+                if m.mid not in self.standbys] or \
+            [self.cluster.add_machine().mid]
+        standby_mod.prepare_general_standby(
+            self.engine, self.cluster[free[0]], self.clock, self.cost)
+        self.standbys.append(free[0])
+        rep.pairs = {mid: free[0]}
+        rep.overlap = self.clock.now - t0
+        self.reports.append(rep)
+        return rep
+
+    def checkpoint_restart(self, failed: int) -> MigrationReport:
+        """Full-reinit baseline recovery (§2.3 S1): stop the job, pull
+        the last *storage* checkpoint everywhere, rebuild every comm
+        group from scratch. Downtime is the modeled Megatron-style
+        restart (core/baselines.py) — the mechanics below (state
+        restore, group re-establishment) happen inside that window.
+        Requires a prior save_to_storage()."""
+        from repro.models.registry import count_params
+        assert self.storage, "checkpoint_restart needs save_to_storage()"
+        rep = MigrationReport("ckpt_restart")
+        d, s = self.engine.coords_of(failed)
+        fm = self.cluster[failed]
+        fm.fail()
+        self.imc.drop_node(failed)
+
+        t0 = self.clock.now
+        self.clock.advance(self.cost.detect_failure, "detect",
+                           lane="downtime")
+        gpus = sum(self.cluster[m].gpus for m in self._training_mids())
+        base = baselines.megatron_restart(
+            float(count_params(self.engine.cfg)), gpus, cost=self.cost,
+            storage_bw=self.storage_bw)
+        self.clock.advance(base.downtime, "full_reinit_restart",
+                           lane="downtime")
+
+        j = self._alloc_joiners(1)[0]
+        rep.pairs = {failed: j}
+        jm = self.cluster[j]
+        step = None
+        for mid, (st, state) in self.storage.items():
+            step = st
+            target = j if mid == failed else mid
+            self.engine.set_state(target, state)
+            rep.state_bytes += tree_bytes(state)
+        self.engine.swap_machine(failed, j)
+        jm.device.alloc(self.engine.state_bytes(j), "train_state",
+                        self.clock.now)
+        jm.device.alloc(self.engine.grad_buffer_bytes(s), "grad_buffer",
+                        self.clock.now)
+        self.engine.compile_role(s, fresh=True)   # cold joiner compile
+        for g in self.engine.groups.values():
+            g.members = [j if m == failed else m for m in g.members]
+            g.pending_plan = None
+            g.pending_members = None
+            g.establish_all()
+        rep.lost_iterations = max(self.engine.step_count - step, 0)
+        self.engine.step_count = step
+        rep.state_path = "storage"
         rep.downtime = self.clock.now - t0
         self.reports.append(rep)
         return rep

@@ -36,6 +36,23 @@ from repro.train.checkpoint import tree_bytes
 FLOPS_PER_GPU = 125e12          # A100 bf16 at realistic MFU (sim charge)
 
 
+class IterationInterrupt(Exception):
+    """Raised by an armed interrupt hook at an iteration phase point.
+
+    The aborted iteration commits nothing (step_count and the loss
+    list only advance at the end of train_iteration); `dirty` is True
+    when machine payloads were already mutated (post_reduce), so the
+    recovery path must roll every stayer back to the last checkpoint
+    before re-running the iteration."""
+
+    def __init__(self, phase: str, it: int, victim: Optional[int] = None):
+        super().__init__(f"iteration {it} interrupted at {phase}")
+        self.phase = phase
+        self.it = it
+        self.victim = victim
+        self.dirty = phase == "post_reduce"
+
+
 def stage_role_key(stage: int) -> int:
     return stage
 
@@ -129,7 +146,8 @@ class PipelineEngine:
                  seed: int = 0,
                  adam: Optional[opt_mod.AdamCfg] = None,
                  use_flat_buffers: bool = True,
-                 param_dtype=jnp.float32):
+                 param_dtype=jnp.float32,
+                 sim_compile_seconds: Optional[float] = None):
         assert global_batch % (dp * micro_batches) == 0
         self.cfg, self.dp, self.pp = cfg, dp, pp
         self.global_batch, self.seq_len = global_batch, seq_len
@@ -166,6 +184,20 @@ class PipelineEngine:
             data_mod.DataCfg(cfg.vocab_size, global_batch, seq_len,
                              seed=seed + 77))
         self._role_cache: Dict[int, CompiledRole] = {}
+        # Deterministic-simulation mode: when set, every clock charge
+        # that would otherwise use a *measured* wall-clock duration
+        # (XLA compiles, shadow-iteration execution) uses this modeled
+        # constant instead. Campaign runs set it so repeated runs emit
+        # byte-identical downtime ledgers; None keeps the measured
+        # charges (the CPU-measurable warm-up benefit).
+        self.sim_compile_seconds = sim_compile_seconds
+        # phase -> callback(engine, phase, it), invoked at named points
+        # inside train_iteration ("pre_reduce": fwd/bwd done, grads not
+        # yet reduced; "post_reduce": update applied, iteration not yet
+        # committed). A callback may raise IterationInterrupt to model
+        # a mid-iteration failure; Controller.interrupt_iteration owns
+        # the recovery choreography.
+        self.interrupt_hooks: Dict[str, Any] = {}
         self.step_count = 0
         self.losses: List[float] = []
         self._stage_flops = self._estimate_stage_flops()
@@ -364,10 +396,40 @@ class PipelineEngine:
         if not fresh:
             self._role_cache[stage] = role
         if charge is not None:
-            self.clock.advance(dt, f"jit:{stage}", lane=charge)
+            self.clock.advance(self.compile_charge(role), f"jit:{stage}",
+                               lane=charge)
         return role
 
+    def compile_charge(self, role: CompiledRole,
+                       exec_seconds: float = 0.0) -> float:
+        """Seconds to charge the clock for compiling (and optionally
+        shadow-executing) a role: the measured wall-clock by default,
+        the modeled constant in deterministic-simulation mode."""
+        if self.sim_compile_seconds is not None:
+            return self.sim_compile_seconds
+        return role.compile_seconds + exec_seconds
+
     # ----------------------------------------------------------- running
+    def _phase_point(self, phase: str, it: int) -> None:
+        """Named checkpoint inside train_iteration where an armed
+        interrupt hook can raise (fault-injection seam)."""
+        cb = self.interrupt_hooks.get(phase)
+        if cb is not None:
+            cb(self, phase, it)
+
+    INTERRUPT_PHASES = ("pre_reduce", "post_reduce")
+
+    def arm_interrupt(self, phase: str, victim: int) -> None:
+        """One-shot: raise IterationInterrupt for `victim` the next
+        time the iteration reaches `phase`."""
+        assert phase in self.INTERRUPT_PHASES, phase
+
+        def fire(engine, ph, it):
+            engine.interrupt_hooks.pop(ph, None)
+            raise IterationInterrupt(ph, it, victim)
+
+        self.interrupt_hooks[phase] = fire
+
     def _mb_tokens(self, it: int, d: int, mb: int) -> jnp.ndarray:
         # one SyntheticStream materialization per iteration, not dp*nmb
         if self._batch_cache[0] != it:
@@ -473,12 +535,14 @@ class PipelineEngine:
                         jax.tree.map(jnp.add, grads_acc[key], dp_)
 
         # DP gradient all-reduce per stage + update
+        self._phase_point("pre_reduce", it)
         navg = jnp.asarray(float(self.dp * self.nmb), jnp.float32)
         if self.use_flat_buffers:
             self._flat_reduce_and_update(grads_acc, navg, it, t_comp,
                                          lane)
         else:
             self._leaf_reduce_and_update(grads_acc, navg, it)
+        self._phase_point("post_reduce", it)
         self.comm.barrier("iter")
         self.step_count = it + 1
         loss = float(np.mean(losses))
@@ -651,7 +715,7 @@ class PipelineEngine:
             shadow_exec = time.perf_counter() - t0
             machine.warm_roles[role_key] = role
             machine.payload.setdefault("sandbox_state", state)
-            self.clock.advance(role.compile_seconds + shadow_exec,
+            self.clock.advance(self.compile_charge(role, shadow_exec),
                                f"shadow:{role_key}", lane=lane)
             return role
         finally:

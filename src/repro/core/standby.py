@@ -91,7 +91,7 @@ def promote_standby(engine: PipelineEngine, machine: Machine,
         # standby) — compile on the critical path.
         role = engine.compile_role(target_stage, fresh=True)
         machine.warm_roles[rt] = role
-        t += role.compile_seconds
+        t += engine.compile_charge(role)
     if rt in ("first", "last", "only"):
         # layer-delta: allocate embedding/output buffers (ms-level).
         cfg = engine.cfg

@@ -80,6 +80,28 @@ def tuples(*strategies: SearchStrategy) -> SearchStrategy:
         f"tuples({', '.join(s.label for s in strategies)})")
 
 
+def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
+                 min_size: int = 0, max_size: int = 10,
+                 **_kw) -> SearchStrategy:
+    """Dict strategy (real-hypothesis surface): draws keys until the
+    target size is reached; duplicate keys collapse, so like hypothesis
+    the result can be smaller than the draw count but never below
+    min_size unless the key space is exhausted (bounded retries)."""
+    def draw(rng):
+        if rng.random() < _BOUNDARY_P:
+            n = rng.choice((min_size, max_size))
+        else:
+            n = rng.randint(min_size, max_size)
+        out = {}
+        attempts = 0
+        while len(out) < n and attempts < 10 * max(n, 1):
+            out[keys.draw(rng)] = values.draw(rng)
+            attempts += 1
+        return out
+    return SearchStrategy(
+        draw, f"dictionaries({keys.label},{values.label})")
+
+
 def permutations(values: Sequence) -> SearchStrategy:
     values = list(values)
 
@@ -168,7 +190,8 @@ def install() -> None:
     hyp = types.ModuleType("hypothesis")
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
-                 "permutations", "just", "composite", "lists", "tuples"):
+                 "permutations", "just", "composite", "lists", "tuples",
+                 "dictionaries"):
         setattr(strat, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

@@ -1,0 +1,130 @@
+"""Interruption-scenario campaign: the paper's constant-downtime claim
+as an executable matrix.
+
+Fast part: matrix well-formedness, property-sampled over (dp, pp).
+Slow part: the reduced scenario matrix end-to-end at dp=2/pp=2 — every
+scenario must converge to bitwise loss parity with the uninterrupted
+reference run, standby-recovery downtime must stay flat across
+roles/timings while the full-reinit baseline exceeds it, and repeated
+campaigns must serialize byte-identically (determinism)."""
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import campaign
+
+KINDS = {"expected", "failure", "straggler", "rebalance", "standby_loss"}
+TIMINGS = {"between_iter", "pre_reduce", "post_reduce",
+           "during_migration", "cascade"}
+RECOVERIES = {"migration", "standby", "ckpt_restart", "full_reinit",
+              "replace"}
+
+
+# ------------------------------------------------- fast: matrix shape
+@given(st.sampled_from([2, 3]), st.sampled_from([2, 3, 4]))
+@settings(max_examples=12)
+def test_default_matrix_well_formed(dp, pp):
+    m = campaign.default_matrix(dp, pp)
+    names = [s.name for s in m]
+    assert len(names) == len(set(names)), "scenario names must be unique"
+    assert len(m) >= 20
+    for s in m:
+        assert s.kind in KINDS and s.timing in TIMINGS \
+            and s.recovery in RECOVERIES, s
+        roles = [s.role] + list(s.params.get("victims", []))
+        if "migrate" in s.params:
+            roles.append(s.params["migrate"])
+        for role in roles:
+            if role.startswith("d") and "s" in role:
+                d, stage = role[1:].split("s")
+                assert int(d) < dp and int(stage) < pp, (s.name, role)
+    # breadth: every kind, timing and recovery path is exercised
+    assert {s.kind for s in m} == KINDS
+    assert {s.timing for s in m} == TIMINGS
+    assert {s.recovery for s in m} == RECOVERIES
+
+
+def test_reduced_matrix_is_subset():
+    full = {s.name for s in campaign.default_matrix(2, 2)}
+    reduced = campaign.reduced_matrix(2, 2)
+    assert {s.name for s in reduced} <= full
+    assert {s.recovery for s in reduced} >= {"standby", "full_reinit"}
+
+
+@given(st.dictionaries(st.sampled_from(["dp", "pp"]),
+                       st.sampled_from([2, 3]),
+                       min_size=2, max_size=2))
+@settings(max_examples=8)
+def test_matrix_samples_as_dict(shape):
+    """Scenario matrices are property-samplable as config dicts (the
+    dictionaries strategy landing in the stub)."""
+    m = campaign.default_matrix(shape["dp"], shape["pp"])
+    assert len(m) >= 20
+
+
+# ------------------------------------- slow: reduced matrix end-to-end
+CFG = campaign.CampaignCfg()
+
+
+@pytest.fixture(scope="module")
+def reference():
+    return campaign.reference_run(CFG)
+
+
+@pytest.fixture(scope="module")
+def reduced_results(reference):
+    return [campaign.run_scenario(sc, CFG, reference)
+            for sc in campaign.reduced_matrix(CFG.dp, CFG.pp)]
+
+
+@pytest.mark.slow
+def test_every_scenario_bitwise_parity(reduced_results):
+    for r in reduced_results:
+        assert r.loss_parity, (r.name, r.loss_max_delta)
+        assert r.steps == 1 + CFG.total_iters
+
+
+@pytest.mark.slow
+def test_standby_downtime_flat_full_reinit_not(reduced_results):
+    """The constant-downtime figure shape: standby recovery is flat
+    across roles and timings; the full-reinit baseline towers over it."""
+    summary = campaign.summarize(reduced_results)
+    standby = [r.downtime_per_event_s for r in reduced_results
+               if r.recovery == "standby"]
+    assert len(standby) >= 4           # roles x timings represented
+    assert summary["standby_flat_within"] <= 1.5, summary
+    assert summary["full_reinit_over_median"] > 1.5, summary
+    assert summary["flat_claim_ok"], summary
+
+
+@pytest.mark.slow
+def test_standby_loss_is_zero_downtime(reduced_results):
+    r = {x.name: x for x in reduced_results}["standby-loss"]
+    assert r.downtime_s == 0.0
+    assert r.overlap_s > 0.0           # replacement prep off-critical-path
+
+
+@pytest.mark.slow
+def test_mid_iteration_aborts_commit_nothing(reduced_results):
+    """pre/post-reduce interrupts abort the iteration; recovery rolls
+    back and the re-run reconverges bitwise (no lost iterations with
+    per-iteration checkpoints)."""
+    by = {x.name: x for x in reduced_results}
+    for name in ("fail-first-pre_reduce", "fail-first-post_reduce"):
+        assert by[name].lost_iterations == 0
+        assert by[name].loss_parity
+        assert by[name].recovery_path == "neighbor"
+
+
+@pytest.mark.slow
+def test_campaign_is_deterministic():
+    """One seed threads Controller + campaign: repeated runs emit a
+    byte-identical BENCH payload (downtime ledger included)."""
+    cfg = campaign.CampaignCfg(warmup_iters=1, total_iters=3)
+    matrix = [s for s in campaign.default_matrix(cfg.dp, cfg.pp)
+              if s.name in ("expected-first", "fail-first-standby")]
+    a = campaign.run_campaign(matrix, cfg)
+    b = campaign.run_campaign(matrix, cfg)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
