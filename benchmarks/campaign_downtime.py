@@ -49,9 +49,12 @@ def run(reduced: bool = True) -> None:
           f";reinit_over={s['full_reinit_over_median']:.1f}"
           f";parity={s['all_loss_parity']}")
     assert s["all_loss_parity"], "a scenario diverged from the reference"
+    # flat_claim_ok covers the standby envelope, the full-reinit gap
+    # AND the mid-switch/GPU-granular/concurrent 1.5x envelope
+    # (summary["mid_switch_claim_ok"] breaks the last one out)
     assert s["flat_claim_ok"], s
     if not reduced:
-        assert s["n_scenarios"] >= 20, s["n_scenarios"]
+        assert s["n_scenarios"] >= 25, s["n_scenarios"]
     print(f"BENCH_downtime.json written -> {json_path}")
 
 

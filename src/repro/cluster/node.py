@@ -89,6 +89,7 @@ class Machine:
     # role -> compiled artifacts warmed up so far (sandbox results)
     warm_roles: Dict[str, Any] = field(default_factory=dict)
     straggle_factor: float = 1.0                    # >1 => slowed down
+    failed_gpus: int = 0                            # GPU-granular faults
 
     def __post_init__(self):
         if self.device is None:
@@ -100,6 +101,14 @@ class Machine:
     def alive(self) -> bool:
         return self.status != NodeStatus.DEAD
 
+    @property
+    def is_healthy(self) -> bool:
+        """Fit to (re)join the job: alive, no degraded devices, not a
+        straggler — the predicate joiner allocation and standby
+        replenishment gate on."""
+        return self.alive and self.failed_gpus == 0 \
+            and self.straggle_factor == 1.0
+
     def steady_state_bytes(self) -> float:
         return self.device.used
 
@@ -109,6 +118,19 @@ class Machine:
         self.warm_roles.clear()
         self.device = MemoryLedger(self.device_capacity)
         self.host = MemoryLedger(self.host.capacity)
+
+    def degrade_gpu(self, n: int = 1) -> None:
+        """GPU-granularity fault (§9 future work): `n` devices on this
+        machine fail but the machine survives — state stays resident
+        and it keeps training at degraded speed until migrated away
+        with advance notice (the expected-migration path, not a kill).
+        Even a fully-degraded machine records the fault (is_healthy
+        goes False) — only the slowdown denominator floors at one
+        surviving device."""
+        self.failed_gpus = min(self.failed_gpus + n, self.gpus)
+        healthy = max(self.gpus - self.failed_gpus, 1)
+        self.straggle_factor = max(self.straggle_factor,
+                                   self.gpus / healthy)
 
 
 class Cluster:

@@ -9,11 +9,16 @@ The async ledger (issue_async / wait_async / drain_async) extends the
 same idea to steady-state communication: a collective issued on a
 channel progresses on that channel's own timeline while the issuing
 lane keeps advancing (backward compute, other channels).  When the
-lane finally blocks on the result, only the *exposed* remainder —
-max(0, ready_at - now) — is charged; the hidden part is tallied in
-comm_hidden so benchmarks can report an overlap fraction.  Ops sharing
-a channel serialize (one NCCL stream per communicator); distinct
-channels are concurrent.
+lane finally blocks on the result, the blocked wall time splits into
+the op's own exposed transfer seconds and the queueing delay spent
+behind earlier ops on the same channel; the unexposed part of the cost
+is tallied in comm_hidden so benchmarks can report an overlap
+fraction.  Ops sharing a channel serialize (one NCCL stream per
+communicator); distinct channels are concurrent.
+
+Conservation invariant (property-tested): per channel, once no op is
+in flight, issued == exposed + hidden exactly, with hidden >= 0 and
+queueing delay in its own non-negative bucket.
 """
 from __future__ import annotations
 
@@ -53,11 +58,14 @@ class SimClock:
         self._next_handle = 0
         self.comm_exposed = 0.0   # ledger seconds charged to a lane
         self.comm_hidden = 0.0    # ledger seconds hidden under other work
+        self.comm_queued = 0.0    # queueing delay surfaced at a wait
         # per-channel breakdown (invariant: once a channel has no
-        # in-flight ops, issued == exposed + hidden for that channel)
+        # in-flight ops, issued == exposed + hidden for that channel;
+        # queueing delay is its own bucket, never negative)
         self.issued_by_channel: Dict[Any, float] = {}
         self.exposed_by_channel: Dict[Any, float] = {}
         self.hidden_by_channel: Dict[Any, float] = {}
+        self.queued_by_channel: Dict[Any, float] = {}
 
     def advance(self, seconds: float, name: str = "",
                 lane: str = "train") -> None:
@@ -84,24 +92,35 @@ class SimClock:
         return h
 
     def wait_async(self, handle: int, lane: str = "train") -> float:
-        """Block the lane on an issued op: charge only the exposed
-        remainder (work not already hidden under time that elapsed
-        since issue). Waiting twice — e.g. after a drain — is a no-op.
-        Returns the exposed seconds charged."""
+        """Block the lane on an issued op. The blocked wall time,
+        max(0, ready_at - now), splits into the op's own exposed
+        transfer seconds (at most `cost`) and the queueing delay it
+        spent behind earlier ops on its channel (the remainder — NOT
+        comm cost, so it lands in the `queued` bucket, never as
+        negative hidden time). The unexposed part of the cost is
+        hidden. Waiting twice — e.g. after a drain — is a no-op.
+        Returns the seconds the lane was blocked (exposed + queued)."""
         op = self._inflight.pop(handle, None)
         if op is None:
             return 0.0
-        exposed = max(0.0, op.ready_at - self.now)
+        blocked = max(0.0, op.ready_at - self.now)
+        exposed = min(blocked, op.cost)
+        queued = blocked - exposed
         hidden = op.cost - exposed
+        assert hidden >= 0.0 and queued >= 0.0, (hidden, queued)
         self.comm_exposed += exposed
         self.comm_hidden += hidden
+        self.comm_queued += queued
         self.exposed_by_channel[op.channel] = \
             self.exposed_by_channel.get(op.channel, 0.0) + exposed
         self.hidden_by_channel[op.channel] = \
             self.hidden_by_channel.get(op.channel, 0.0) + hidden
-        if exposed > 0:
-            self.advance(exposed, f"exposed:{op.name}", lane=lane)
-        return exposed
+        if queued > 0:
+            self.queued_by_channel[op.channel] = \
+                self.queued_by_channel.get(op.channel, 0.0) + queued
+        if blocked > 0:
+            self.advance(blocked, f"exposed:{op.name}", lane=lane)
+        return blocked
 
     def drain_async(self, lane: str = "train") -> float:
         """Wait on every in-flight op (issue order). After a drain the
@@ -122,24 +141,46 @@ class SimClock:
     @contextmanager
     def parallel(self, name: str, lane: str = "downtime"):
         """Concurrent work: `p.track(node, seconds)` accumulates per-node
-        sequential cost; the phase advances by the max."""
+        sequential cost; the phase advances by the max.
+
+        Crash-consistent: an exception inside the tracked body (e.g. a
+        mid-switch fault injection) still records the partial phase and
+        advances the clock by whatever was tracked before the fault, so
+        `now` and the lane totals never go inconsistent."""
         rec = PhaseRecord(name, self.now, 0.0, lane)
 
         class _P:
             def track(_self, node: int, seconds: float) -> None:
                 rec.per_node[node] = rec.per_node.get(node, 0.0) + seconds
 
-        yield _P()
-        rec.duration = max(rec.per_node.values(), default=0.0)
-        self.phases.append(rec)
-        self.now += rec.duration
-        self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) \
-            + rec.duration
+        try:
+            yield _P()
+        finally:
+            rec.duration = max(rec.per_node.values(), default=0.0)
+            self.phases.append(rec)
+            self.now += rec.duration
+            self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) \
+                + rec.duration
 
     def lane_total(self, lane: str) -> float:
         return self._lane_totals.get(lane, 0.0)
 
     def window(self, t0: float, t1: float, lane: Optional[str] = None):
-        return [p for p in self.phases
-                if p.start >= t0 and p.start < t1
-                and (lane is None or p.lane == lane)]
+        """Phases overlapping [t0, t1), with durations *clipped* to the
+        window: a phase straddling either boundary contributes exactly
+        its in-window portion, so downtime windows around injected
+        faults are exact rather than attributed by start time alone."""
+        out = []
+        for p in self.phases:
+            if lane is not None and p.lane != lane:
+                continue
+            end = p.start + p.duration
+            s, e = max(p.start, t0), min(end, t1)
+            if e > s or (p.duration == 0.0 and t0 <= p.start < t1):
+                dur = max(e - s, 0.0)
+                # per-node seconds scale with the clip (and are copied:
+                # windowed records must never alias the phase history)
+                frac = dur / p.duration if p.duration > 0 else 0.0
+                per_node = {n: v * frac for n, v in p.per_node.items()}
+                out.append(PhaseRecord(p.name, s, dur, p.lane, per_node))
+        return out

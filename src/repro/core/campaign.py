@@ -1,16 +1,19 @@
 """Deterministic fault-injection campaign engine.
 
 Drives `Controller` through a declarative scenario matrix —
-interruption kind (expected leave, unexpected failure, straggler,
-rebalance, standby loss) x role (first/middle/last stage, every DP
-rank, the standby itself) x timing (between iterations, mid-iteration
-before/after the bucket reduce, during an in-flight migration,
+interruption kind (expected leave, unexpected failure, GPU-granular
+degradation, straggler, rebalance, standby loss) x role
+(first/middle/last stage, every DP rank, the standby itself) x timing
+(between iterations, mid-iteration before/after the bucket reduce,
+during an in-flight migration, *inside the switching machinery itself*
+— during phase-1 delta prep, during sandboxed warmup, between
+per-group switchovers, or as a concurrent second failure — and
 back-to-back cascades) x recovery path (standby promotion,
 standby-exhausted elastic fallback, full-reinit checkpoint-restart
 baseline) — and records a structured `ScenarioResult` per run: sim
 downtime split by lane via the SimClock ledger, loss parity against an
 uninterrupted reference run with the same seed, migrated bytes, delta
-fraction.
+fraction, and abort/resume cycles of the migration state machine.
 
 Every run is fully deterministic: one seed threads through the data
 stream and Controller, and the engine's `sim_compile_seconds` knob
@@ -35,9 +38,19 @@ from repro.cluster.simclock import SimClock
 from repro.configs.gpt import tiny_gpt
 from repro.core.controller import Controller
 from repro.core.engine import PipelineEngine
+from repro.core.migration import FaultPoint
 from repro.core.sandbox import CommHooks
 
 LANES = ("downtime", "overlap", "train")
+
+# timing axis values that land *inside* the migration state machine;
+# each maps to the (step kind, occurrence) the FaultPoint fires at
+MID_SWITCH_TIMINGS = {
+    "during_prepare": ("prepare", 1),
+    "during_warmup": ("warmup", 0),
+    "mid_switchover": ("switch", 1),
+    "concurrent_second_failure": ("switch", 1),
+}
 
 
 # ---------------------------------------------------------------- model
@@ -48,10 +61,12 @@ class Scenario:
     (standby_count, cascade victims, migration leaver) ride in
     `params`."""
     name: str
-    kind: str        # expected | failure | straggler | rebalance | standby_loss
+    kind: str        # expected | failure | gpu_degrade | straggler |
+    #                # rebalance | standby_loss
     role: str
     timing: str      # between_iter | pre_reduce | post_reduce |
-    #                # during_migration | cascade
+    #                # during_migration | during_prepare | during_warmup |
+    #                # mid_switchover | concurrent_second_failure | cascade
     recovery: str    # migration | standby | ckpt_restart | full_reinit
     #                # | replace
     params: Dict[str, Any] = field(default_factory=dict)
@@ -77,6 +92,7 @@ class ScenarioResult:
     loss_parity: bool
     steps: int                   # committed iterations at scenario end
     seed: int                    # the one seed that governed the run
+    resumes: int = 0             # migration-state-machine abort/resumes
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -179,6 +195,28 @@ def default_matrix(dp: int = 2, pp: int = 2) -> List[Scenario]:
     scs.append(Scenario("fail-during-migration", "failure",
                         f"d{min(dp - 1, 1)}s{pp - 1}", "during_migration",
                         "standby", {"migrate": f"d0s{pp - 1}"}))
+    # failures landing *inside* the migration state machine itself:
+    # during phase-1 delta prep, during sandboxed warmup, and between
+    # per-group switchovers (the run aborts, rolls partially-switched
+    # groups back to a consistent epoch, recovers via standby, replans
+    # and resumes)
+    vic = f"d{min(dp - 1, 1)}s0"
+    for timing in ("during_prepare", "during_warmup", "mid_switchover"):
+        scs.append(Scenario(f"fail-{timing.replace('_', '-')}", "failure",
+                            vic, timing, "standby",
+                            {"migrate": f"d0s{pp - 1}"}))
+    # two concurrent failures landing mid-switch (different groups,
+    # handled back-to-back before one resume)
+    scs.append(Scenario("fail-concurrent-second", "failure", vic,
+                        "concurrent_second_failure", "standby",
+                        {"migrate": f"d0s{pp - 1}", "standby_count": 2,
+                         "victims": [vic, "d0s0"]}))
+    # GPU-granularity faults (§9): one device degrades, the machine
+    # keeps training while migrated away with notice
+    scs.append(Scenario("gpu-degrade-first", "gpu_degrade", "d0s0",
+                        "between_iter", "migration"))
+    scs.append(Scenario("gpu-degrade-last", "gpu_degrade", f"d0s{pp - 1}",
+                        "between_iter", "migration"))
     # back-to-back cascades: two failures with no training between
     scs.append(Scenario("cascade-two-standbys", "failure", "d0s0",
                         "cascade", "standby",
@@ -222,6 +260,9 @@ REDUCED_NAMES = (
     "expected-first", "fail-first-standby", "fail-last-standby",
     "fail-dp1-standby", "fail-first-pre_reduce", "fail-first-post_reduce",
     "fail-no-standby", "fail-first-full-reinit", "standby-loss",
+    # mid-switch slice: one overlapped-phase fault, one rollback+resume
+    # fault, one GPU-granular degradation
+    "fail-during-warmup", "fail-mid-switchover", "gpu-degrade-first",
 )
 
 
@@ -247,10 +288,24 @@ def _inject(ctl: Controller, sc: Scenario) -> int:
     if sc.kind == "standby_loss":
         ctl.standby_failure()
         return 1
+    if sc.kind == "gpu_degrade":
+        ctl.gpu_fault(_victim(ctl, sc.role))
+        return 1
     assert sc.kind == "failure", sc.kind
     if sc.timing in ("pre_reduce", "post_reduce"):
         ctl.interrupt_iteration(_victim(ctl, sc.role), sc.timing)
         return 1
+    if sc.timing in MID_SWITCH_TIMINGS:
+        # the fault lands inside the migration state machine: arm a
+        # FaultPoint at the matching journal step of an expected
+        # migration and let the run abort / roll back / resume
+        step_kind, idx = MID_SWITCH_TIMINGS[sc.timing]
+        victims = [_victim(ctl, r)
+                   for r in sc.params.get("victims", [sc.role])]
+        ctl.expected_migration(
+            [_victim(ctl, sc.params["migrate"])],
+            inject=FaultPoint(step_kind, idx, victims))
+        return 1 + len(victims)
     if sc.timing == "during_migration":
         fail_mid = _victim(ctl, sc.role)
         ctl.expected_migration(
@@ -308,7 +363,8 @@ def run_scenario(sc: Scenario, cfg: CampaignCfg,
         recovery_path="+".join(sorted({r.state_path for r in reps
                                        if r.state_path})),
         loss_max_delta=max(deltas, default=float("inf")),
-        loss_parity=parity, steps=eng.step_count, seed=ctl.seed)
+        loss_parity=parity, steps=eng.step_count, seed=ctl.seed,
+        resumes=sum(r.resumes for r in reps))
 
 
 def reference_run(cfg: CampaignCfg,
@@ -339,14 +395,22 @@ def run_campaign(scenarios: Optional[List[Scenario]] = None,
 def summarize(results: List[ScenarioResult]) -> dict:
     """The paper's constant-downtime claim, computed over the matrix:
     standby-recovery downtime is flat across roles/timings (max within
-    1.5x of the median) while the full-reinit baseline exceeds it."""
+    1.5x of the median) while the full-reinit baseline exceeds it —
+    and the claim now covers faults landing *inside* the switching
+    machinery (mid-switch timings, GPU-granular faults, concurrent
+    second failures), whose per-event downtime must stay within the
+    same 1.5x envelope of the standby median."""
     standby = [r.downtime_per_event_s for r in results
                if r.recovery == "standby"]
     reinit = [r.downtime_per_event_s for r in results
               if r.recovery == "full_reinit"]
+    mid = [r.downtime_per_event_s for r in results
+           if r.timing in MID_SWITCH_TIMINGS or r.kind == "gpu_degrade"]
     med = median(standby) if standby else 0.0
     flat_within = max(standby, default=0.0) / max(med, 1e-12)
     reinit_over = (min(reinit) / max(med, 1e-12)) if reinit else 0.0
+    mid_over = max(mid, default=0.0) / max(med, 1e-12)
+    mid_ok = not mid or mid_over <= 1.5
     return {
         "n_scenarios": len(results),
         "standby_downtime_median_s": med,
@@ -354,9 +418,11 @@ def summarize(results: List[ScenarioResult]) -> dict:
         "standby_flat_within": flat_within,
         "full_reinit_downtime_min_s": min(reinit, default=0.0),
         "full_reinit_over_median": reinit_over,
+        "mid_switch_max_over_median": mid_over,
+        "mid_switch_claim_ok": mid_ok,
         "all_loss_parity": all(r.loss_parity for r in results),
         "flat_claim_ok": bool(standby) and flat_within <= 1.5
-        and (not reinit or reinit_over > 1.5),
+        and (not reinit or reinit_over > 1.5) and mid_ok,
     }
 
 
@@ -364,9 +430,10 @@ def summarize(results: List[ScenarioResult]) -> dict:
 def to_markdown(payload: dict) -> str:
     """Render the campaign as the paper-shaped downtime table."""
     cols = ("name", "kind", "role", "timing", "recovery",
-            "downtime_per_event_s", "lost_iterations", "loss_parity")
+            "downtime_per_event_s", "lost_iterations", "resumes",
+            "loss_parity")
     heads = ("scenario", "kind", "role", "timing", "recovery",
-             "downtime/event (s)", "lost iters", "parity")
+             "downtime/event (s)", "lost iters", "resumes", "parity")
     lines = ["# Interruption-scenario downtime campaign", "",
              "| " + " | ".join(heads) + " |",
              "|" + "|".join("---" for _ in heads) + "|"]
@@ -387,6 +454,9 @@ def to_markdown(payload: dict) -> str:
         f"- full-reinit baseline minimum: "
         f"**{s['full_reinit_downtime_min_s']:.3f} s** "
         f"({s['full_reinit_over_median']:.1f}x the standby median)",
+        f"- mid-switch / GPU-granular / concurrent faults: max "
+        f"**{s['mid_switch_max_over_median']:.2f}x** the standby "
+        f"median (claim holds: {s['mid_switch_claim_ok']})",
         f"- bitwise loss parity on every scenario: "
         f"**{s['all_loss_parity']}**",
         f"- constant-downtime claim holds: **{s['flat_claim_ok']}**",

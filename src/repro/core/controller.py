@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,6 +23,8 @@ from repro.core import two_phase
 from repro.core.engine import (IterationInterrupt, PipelineEngine,
                                stage_role_key, stage_type)
 from repro.core.groups import CommGroup, GroupState, compute_delta_plan
+from repro.core.migration import (FaultPoint, MidSwitchFault, MigState,
+                                  MigrationRun, Step)
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
 
 
@@ -44,6 +46,8 @@ class MigrationReport:
     pairs: Dict[int, int] = field(default_factory=dict)
     state_path: str = ""
     lost_iterations: int = 0
+    resumes: int = 0                       # mid-switch abort/resume cycles
+    journal: List[str] = field(default_factory=list)
 
     @property
     def delta_fraction(self) -> float:
@@ -73,6 +77,7 @@ class Controller:
         self.storage: Dict[int, Tuple[int, dict]] = {}
         self.standbys: List[int] = []
         self.reports: List[MigrationReport] = []
+        self.last_run: Optional[MigrationRun] = None
 
     # ------------------------------------------------------------ setup
     def bootstrap_job(self, machine_ids: List[int],
@@ -81,11 +86,9 @@ class Controller:
         if record:
             self.engine.record_iteration()       # §4.2 pre-record step
             self._tick_checkpoints()
-        free = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)]
-        for mid in free[:self.standby_count]:
-            standby_mod.prepare_general_standby(
-                self.engine, self.cluster[mid], self.clock, self.cost)
-            self.standbys.append(mid)
+        standby_mod.replenish(self.engine, self.cluster, self.standbys,
+                              self.clock, self.cost,
+                              target=self.standby_count)
 
     def _training_mids(self) -> List[int]:
         return list(self.engine.grid.values())
@@ -116,8 +119,10 @@ class Controller:
                 if any(m in g.members for m in mids)]
 
     def _alloc_joiners(self, n: int) -> List[int]:
+        # degraded / straggling leavers return to the pool but must not
+        # be handed back to the job as joiners
         idle = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
-                if m.mid not in self.standbys]
+                if m.mid not in self.standbys and m.is_healthy]
         while len(idle) < n:
             idle.append(self.cluster.add_machine().mid)
         return idle[:n]
@@ -126,83 +131,253 @@ class Controller:
     def expected_migration(self, leavers: List[int],
                            joiners: Optional[List[int]] = None,
                            train_during_prep: int = 0,
-                           on_prepared: Optional[Callable] = None
+                           on_prepared: Optional[Callable] = None,
+                           inject: Optional[FaultPoint] = None
                            ) -> MigrationReport:
-        """Live migration with advance notice (§3 steps 1-3).
+        """Live migration with advance notice (§3 steps 1-3), driven as
+        a resumable state machine (core/migration.py): IDLE ->
+        DELTA_PREPARED -> JOINERS_WARMED -> SWITCHING -> COMMITTED.
 
         `on_prepared(controller)` fires after the preparation phase but
         before the switching phase — the seam where a cascading event
         (e.g. an unexpected failure handled while this migration was in
         flight) can land; any affected group whose pending plan the
-        cascade invalidated is re-prepared before switching."""
+        cascade invalidated is re-prepared before switching.
+
+        `inject` arms a FaultPoint: the run aborts at the matching
+        journal step, rolls any partially-switched groups back to a
+        consistent epoch, recovers the victims (standby promotion),
+        re-plans against the new failure set and resumes — completed
+        steps are never redone and no full re-init happens."""
         rep = MigrationReport("expected")
         joiners = joiners or self._alloc_joiners(len(leavers))
         pairing = dict(zip(leavers, joiners))
-        rep.pairs = dict(pairing)
+        rep.pairs = pairing                  # live: replans update it
+        # reserve the joiners NOW: a fault recovery allocating an
+        # elastic machine mid-migration must not be handed a machine
+        # already promised to this run (joiners used to stay IDLE
+        # until their warmup step, double-assigning the grid)
+        for j in pairing.values():
+            self.cluster[j].status = NodeStatus.PREPARING
         affected = self._affected_groups(leavers)
         steady = {m.mid: m.device.used for m in self.cluster.machines.values()}
         peak0 = {m.mid: m.device.peak for m in self.cluster.machines.values()}
+        lanes0 = {ln: self.clock.lane_total(ln)
+                  for ln in ("downtime", "overlap")}
+        run = MigrationRun(self.clock, fault=inject, label="expected")
+        xferred: set = set()
 
-        # ---- preparation phase (overlapped with training) ----
-        t_prep0 = self.clock.now
-        for g in affected:
-            sub = {l: pairing[l] for l in g.members if l in pairing}
-            two_phase.ccl_prepare_stayers(g, sub, self.cluster, self.clock,
-                                          self.cost)
-            two_phase.ccl_prepare_joiners(g, sub, self.cluster, self.clock,
-                                          self.cost)
-        for l, j in pairing.items():
-            d, s = self.engine.coords_of(l)
-            jm = self.cluster[j]
-            jm.status = NodeStatus.PREPARING
-            self.engine.shadow_iteration(jm, stage_role_key(s), s,
-                                         lane="overlap")
-        for _ in range(train_during_prep):   # foreground keeps training
-            self.engine.train_iteration()
-            self._tick_checkpoints()
-        if on_prepared is not None:
+        # ---- step bodies (close over pairing so replans take effect)
+        def prep(g):
+            def fn():
+                sub = {l: pairing[l] for l in g.members if l in pairing}
+                if not sub:
+                    return
+                two_phase.ccl_prepare_stayers(g, sub, self.cluster,
+                                              self.clock, self.cost)
+                two_phase.ccl_prepare_joiners(g, sub, self.cluster,
+                                              self.clock, self.cost)
+            return fn
+
+        def warm(l):
+            def fn():
+                d, s = self.engine.coords_of(l)
+                jm = self.cluster[pairing[l]]   # PREPARING since alloc
+                self.engine.shadow_iteration(jm, stage_role_key(s), s,
+                                             lane="overlap")
+            return fn
+
+        def train_prep():
+            for _ in range(train_during_prep):   # foreground keeps training
+                self.engine.train_iteration()
+                self._tick_checkpoints()
+
+        def cascade():
             on_prepared(self)
             self._reprepare_stale(affected, pairing)
-        rep.overlap = self.clock.now - t_prep0
 
-        # ---- switching phase (downtime) ----
-        t0 = self.clock.now
-        self.clock.advance(self.cost.iteration_barrier, "drain",
-                           lane="downtime")
-        rep.barrier = self.cost.iteration_barrier
-        # one-to-one state transfers run in parallel across pairs: real
-        # copies now, single max-time charge (constant in #pairs, §8.3).
-        transfers = []
-        for l, j in pairing.items():
-            tr = state_sync.leaver_to_joiner(self.engine, l, j,
-                                             self.clock, self.cost,
-                                             charge=False)
-            transfers.append(tr)
-        par = max(t.seconds for t in transfers)
-        self.clock.advance(par, "state_xfer:parallel", lane="downtime")
-        rep.state_transfer_s = par
-        rep.state_bytes = sum(t.nbytes for t in transfers)
+        def barrier():
+            rep.overlap = self.clock.lane_total("overlap") \
+                - lanes0["overlap"]
+            self.clock.advance(self.cost.iteration_barrier, "drain",
+                               lane="downtime")
+            rep.barrier += self.cost.iteration_barrier
 
-        p2 = two_phase.switchover_many(affected, self.cluster, self.clock,
-                                       self.cost)
-        rep.ccl_phase2_s = max((r.phase2_time for r in p2), default=0.0)
-        rep.qps_added = sum(r.qps_added for r in p2)
-        rep.qps_dropped = sum(r.qps_dropped for r in p2)
-        rep.qps_inherited = sum(r.qps_inherited for r in p2)
-        for l, j in pairing.items():
-            self.engine.swap_machine(l, j)
-        rep.downtime = self.clock.now - t0
-        rep.mem_overhead_bytes = max(
-            (self.cluster[mid].device.peak - max(peak0[mid], steady[mid]))
-            for mid in steady if mid not in pairing.values())
-        self.reports.append(rep)
+        def xfer():
+            # one-to-one state transfers run in parallel across pairs:
+            # real copies now, single max-time charge (constant in
+            # #pairs, §8.3). A resume only re-ships pairs whose joiner
+            # the fault invalidated.
+            todo = [(l, j) for l, j in pairing.items() if l not in xferred]
+            transfers = [state_sync.leaver_to_joiner(
+                self.engine, l, j, self.clock, self.cost, charge=False)
+                for l, j in todo]
+            par = max((t.seconds for t in transfers), default=0.0)
+            self.clock.advance(par, "state_xfer:parallel", lane="downtime")
+            rep.state_transfer_s += par
+            rep.state_bytes += sum(t.nbytes for t in transfers)
+            xferred.update(l for l, _ in todo)
+
+        def swap(l):
+            def fn():
+                self.engine.swap_machine(l, pairing[l])
+            return fn
+
+        def commit():
+            rep.mem_overhead_bytes = max(
+                (self.cluster[mid].device.peak
+                 - max(peak0[mid], steady[mid]))
+                for mid in steady if mid not in pairing.values())
+
+        steps = [Step(f"prepare:{g.gid}", "prepare", prep(g))
+                 for g in affected]
+        if steps:
+            steps[-1].state_after = MigState.DELTA_PREPARED
+        warms = [Step(f"warmup:{l}", "warmup", warm(l)) for l in leavers]
+        if warms:
+            warms[-1].state_after = MigState.JOINERS_WARMED
+        steps += warms
+        if train_during_prep:
+            steps.append(Step("train_prep", "train", train_prep))
+        if on_prepared is not None:
+            steps.append(Step("cascade_seam", "cascade", cascade))
+        steps.append(Step("barrier", "barrier", barrier,
+                          MigState.SWITCHING))
+        steps.append(Step("xfer", "xfer", xfer))
+        steps += [Step(f"switch:{g.gid}", "switch",
+                       self._switch_step(run, rep, g))
+                  for g in affected]
+        steps += [Step(f"swap:{l}", "swap", swap(l)) for l in leavers]
+        steps.append(Step("commit", "commit", commit, MigState.COMMITTED))
+        run.set_steps(steps)
+
+        self._drive_run(run, rep, pairing, affected, xferred,
+                        lanes0["downtime"])
         return rep
+
+    def _drive_run(self, run: MigrationRun, rep: MigrationReport,
+                   pairing: Dict[int, int], affected: List[CommGroup],
+                   xferred: set, lanes0_dt: float) -> None:
+        """Execute a migration run to COMMITTED, absorbing mid-switch
+        faults through abort/rollback/resume cycles, then finalize the
+        report from the downtime-lane delta and the journal."""
+        while True:
+            try:
+                run.execute()
+                break
+            except MidSwitchFault as fault:
+                self._recover_mid_switch(run, fault, pairing, affected,
+                                         xferred)
+        assert run.fault is None or run.fault.fired, \
+            f"armed FaultPoint {run.fault} never matched a step"
+        rep.downtime = self.clock.lane_total("downtime") - lanes0_dt
+        rep.resumes = run.resumes
+        rep.journal = [e.step for e in run.journal]
+        self.last_run = run
+        self.reports.append(rep)
+
+    def _switch_step(self, run: MigrationRun, rep: MigrationReport,
+                     g: CommGroup) -> Callable[[], None]:
+        """Per-group phase-2 step shared by every migration path: the
+        applied plan is recorded on the run so rollback can revert it,
+        and the QP delta accrues on the report."""
+        def fn():
+            plan = g.pending_plan
+            r = two_phase.ccl_switchover(g, self.cluster, self.clock,
+                                         self.cost)
+            run.record_switch(g, plan)
+            rep.ccl_phase2_s = max(rep.ccl_phase2_s, r.phase2_time)
+            rep.qps_added += r.qps_added
+            rep.qps_dropped += r.qps_dropped
+            rep.qps_inherited += r.qps_inherited
+        return fn
+
+    def _recover_mid_switch(self, run: MigrationRun,
+                            fault: MidSwitchFault,
+                            pairing: Dict[int, int],
+                            affected: List[CommGroup],
+                            xferred: set) -> None:
+        """Crash-consistent abort + resume for a fault that landed
+        inside a migration: revert partially-switched groups to the
+        pre-switch epoch, settle the async ledger inside the downtime
+        window, recover every victim, drop exactly the journal steps
+        the new failure set invalidated, and mark the run resumable."""
+        assert all(v not in pairing for v in fault.victims), \
+            "leaver victims are not modeled (the leaver is departing " \
+            "anyway — fail the joiner or a stayer instead)"
+        joiner_victims = [v for v in fault.victims
+                          if v in pairing.values()]
+        train_victims = [v for v in fault.victims
+                         if v not in pairing.values()]
+        # joiner replacement is modeled only on the expected path and
+        # only before the joiner was swapped into the grid (afterwards
+        # it is an ordinary training machine)
+        assert not joiner_victims or run.label == "expected", \
+            "a joiner dying inside a failure recovery is not modeled"
+        done_before = set(run.done)
+        # a dead joiner invalidates even a fully-completed switchover
+        run.rollback(lambda g, plan: two_phase.ccl_revert_switchover(
+            g, plan, self.cluster, self.clock, self.cost),
+            force=bool(joiner_victims))
+        self.clock.drain_async(lane="downtime")
+        for v in joiner_victims:
+            stale_leavers = [l for l, j in pairing.items() if j == v]
+            self.cluster[v].fail()
+            for l in stale_leavers:
+                assert f"swap:{l}" not in run.done, \
+                    "joiner already swapped into the grid; it must be " \
+                    "recovered as a training-machine victim"
+                pairing[l] = self._alloc_joiners(1)[0]
+                self.cluster[pairing[l]].status = NodeStatus.PREPARING
+                run.invalidate(f"warmup:{l}")
+                xferred.discard(l)
+            # the xfer step re-runs but only re-ships the pairs just
+            # discarded from `xferred` (state never reached the dead
+            # joiner); pairs already shipped to live joiners keep theirs
+            run.invalidate("xfer")
+        for v in train_victims:
+            self.unexpected_failure(v)
+        # re-plan: drop the journal steps for any group whose staged
+        # delta the recovery invalidated (plan cleared by a victim's
+        # switchover, membership changed, or joiner replaced)
+        for g in affected:
+            if f"switch:{g.gid}" in run.done:
+                continue       # committed switch that survives the fault
+            sub = {l: pairing[l] for l in g.members if l in pairing}
+            intact = (g.pending_plan is not None and sub
+                      and g.pending_plan.replace == sub
+                      and g.state in (GroupState.READY_TO_SWITCHOUT,
+                                      GroupState.PREPARING))
+            if intact:
+                continue
+            g.pending_plan = None
+            g.pending_members = None
+            g.state = GroupState.ACTIVE
+            run.invalidate(f"prepare:{g.gid}", f"switch:{g.gid}",
+                           "prepare:all")
+        # if overlapped preparation work (phase 1 / warmup) must re-run
+        # after the barrier already drained, rollback restored a
+        # trainable epoch and the job resumes training while it
+        # overlaps — so the switching window must re-open with a fresh
+        # iteration drain when the re-prepared switch goes down again
+        kinds = {s.name: s.kind for s in run.steps}
+        redo_overlapped = any(kinds.get(n) in ("prepare", "warmup")
+                              for n in done_before - run.done)
+        if redo_overlapped and "barrier" in run.done:
+            run.invalidate("barrier")
+        run.mark_resumed(fault)
 
     # --------------------------------------------- unexpected interruption
     def unexpected_failure(self, failed: int,
                            use_standby: bool = True,
-                           dirty: bool = False) -> MigrationReport:
-        """Failure -> detect -> promote standby -> switch (§3 a-c).
+                           dirty: bool = False,
+                           inject: Optional[FaultPoint] = None
+                           ) -> MigrationReport:
+        """Failure -> detect -> promote standby -> switch (§3 a-c),
+        journaled through the same resumable state machine as expected
+        migrations, so a *concurrent second failure* landing anywhere
+        in this recovery (including between per-group switchovers)
+        aborts cleanly and resumes instead of corrupting the job.
 
         dirty=True marks a mid-iteration abort that already mutated
         stayer payloads (post-update): every stayer rolls back to the
@@ -210,85 +385,112 @@ class Controller:
         rep = MigrationReport("unexpected")
         d, s = self.engine.coords_of(failed)
         fm = self.cluster[failed]
-        ckpt_step = self.engine.step_count
-        fm.fail()
-        self.imc.drop_node(failed)
-
-        t0 = self.clock.now
-        self.clock.advance(self.cost.detect_failure, "detect",
-                           lane="downtime")
-        # choose joiner
-        used_standby = bool(use_standby and self.standbys)
-        if used_standby:
-            j = self.standbys.pop(0)
-            rep.promote_s = standby_mod.promote_standby(
-                self.engine, self.cluster[j], s, self.clock, self.cost)
-        else:
-            # no standby: an elastic machine joins; its preparation
-            # (sandbox + CCL phase 1) overlaps with *nothing* (the job
-            # is stalled), but TrainMover still overlaps CCL, warmup and
-            # state transfer with each other instead of serializing.
-            j = self._alloc_joiners(1)[0]
-            jm = self.cluster[j]
-            role = self.engine.shadow_iteration(
-                jm, stage_role_key(s), s, lane="downtime",
-                fresh_compile=True)
-            rep.promote_s = self.engine.compile_charge(role)
-        rep.pairs = {failed: j}
         affected = self._affected_groups([failed])
-        if used_standby:
-            # The general standby pre-bootstrapped at job start, so the
-            # groups go straight to ready-to-switchout: only the local
-            # delta-plan computation remains (ms-level).
-            for g in affected:
-                plan = compute_delta_plan(g, {failed: j})
-                g.pending_plan = plan
-                g.pending_members = plan.new_members
-                g.state = GroupState.READY_TO_SWITCHOUT
-            self.clock.advance(0.05 * len(affected), "delta_plan",
+        lanes0_dt = self.clock.lane_total("downtime")
+        run = MigrationRun(self.clock, fault=inject,
+                           label=f"failure:{failed}")
+        pairing: Dict[int, int] = {}     # failed -> joiner, set by promote
+        ctx: Dict[str, Any] = {}
+
+        def detect():
+            fm.fail()
+            self.imc.drop_node(failed)
+            self.clock.advance(self.cost.detect_failure, "detect",
                                lane="downtime")
-        else:
-            for g in affected:
-                two_phase.ccl_prepare_stayers(g, {failed: j}, self.cluster,
-                                              self.clock, self.cost,
-                                              lane="downtime")
-                two_phase.ccl_prepare_joiners(g, {failed: j}, self.cluster,
-                                              self.clock, self.cost,
-                                              lane="downtime")
 
-        storage_state = self.storage.get(failed)
-        tr, step = state_sync.recover_state(
-            self.engine, failed, j, self.imc if self.per_iteration_ckpt
-            else None, self.clock, self.cost, self.storage_bw,
-            storage_state)
-        rep.state_transfer_s = tr.seconds
-        rep.state_bytes = tr.nbytes
-        rep.state_path = tr.path
+        def promote():
+            used_standby = bool(use_standby and self.standbys)
+            ctx["used_standby"] = used_standby
+            if used_standby:
+                j = self.standbys.pop(0)
+                rep.promote_s = standby_mod.promote_standby(
+                    self.engine, self.cluster[j], s, self.clock, self.cost)
+            else:
+                # no standby: an elastic machine joins; its preparation
+                # (sandbox + CCL phase 1) overlaps with *nothing* (the
+                # job is stalled), but TrainMover still overlaps CCL,
+                # warmup and state transfer with each other instead of
+                # serializing.
+                j = self._alloc_joiners(1)[0]
+                jm = self.cluster[j]
+                role = self.engine.shadow_iteration(
+                    jm, stage_role_key(s), s, lane="downtime",
+                    fresh_compile=True)
+                rep.promote_s = self.engine.compile_charge(role)
+            pairing[failed] = j
+            rep.pairs = {failed: j}
 
-        # stayers roll back to the same checkpoint step (local/in-mem)
-        rep.lost_iterations = max(self.engine.step_count - step, 0)
-        if rep.lost_iterations or dirty:
-            rb = 0.0
-            for mid in self._training_mids():
-                if mid == failed:
-                    continue
-                hit = self.imc.get(mid)
-                if hit is not None and hit[0] == step:
-                    self.engine.set_state(mid, hit[1])
-                    rb = max(rb, self.cost.transfer(
-                        tree_bytes(hit[1]), self.cost.bw_intra_node))
-            self.clock.advance(rb, "rollback", lane="downtime")
-            rep.rollback_s = rb
-            self.engine.step_count = step
+        def plan():
+            j = pairing[failed]
+            # on a resume, groups whose switch already committed keep
+            # their applied membership — re-planning them would strand
+            # a stale pending plan on an ACTIVE group
+            todo = [g for g in affected
+                    if f"switch:{g.gid}" not in run.done]
+            if ctx["used_standby"]:
+                # The general standby pre-bootstrapped at job start, so
+                # the groups go straight to ready-to-switchout: only the
+                # local delta-plan computation remains (ms-level).
+                for g in todo:
+                    p = compute_delta_plan(g, {failed: j})
+                    g.pending_plan = p
+                    g.pending_members = p.new_members
+                    g.state = GroupState.READY_TO_SWITCHOUT
+                self.clock.advance(0.05 * len(todo), "delta_plan",
+                                   lane="downtime")
+            else:
+                for g in todo:
+                    two_phase.ccl_prepare_stayers(
+                        g, {failed: j}, self.cluster, self.clock,
+                        self.cost, lane="downtime")
+                    two_phase.ccl_prepare_joiners(
+                        g, {failed: j}, self.cluster, self.clock,
+                        self.cost, lane="downtime")
 
-        p2 = two_phase.switchover_many(affected, self.cluster, self.clock,
-                                       self.cost)
-        rep.ccl_phase2_s = max((r.phase2_time for r in p2), default=0.0)
-        rep.qps_added = sum(r.qps_added for r in p2)
-        rep.qps_inherited = sum(r.qps_inherited for r in p2)
-        self.engine.swap_machine(failed, j)
-        rep.downtime = self.clock.now - t0
-        self.reports.append(rep)
+        def recover():
+            j = pairing[failed]
+            storage_state = self.storage.get(failed)
+            tr, step = state_sync.recover_state(
+                self.engine, failed, j, self.imc if self.per_iteration_ckpt
+                else None, self.clock, self.cost, self.storage_bw,
+                storage_state)
+            rep.state_transfer_s = tr.seconds
+            rep.state_bytes = tr.nbytes
+            rep.state_path = tr.path
+            # stayers roll back to the same checkpoint step (local/in-mem)
+            rep.lost_iterations = max(self.engine.step_count - step, 0)
+            if rep.lost_iterations or dirty:
+                rb = 0.0
+                for mid in self._training_mids():
+                    if mid == failed:
+                        continue
+                    hit = self.imc.get(mid)
+                    if hit is not None and hit[0] == step:
+                        self.engine.set_state(mid, hit[1])
+                        rb = max(rb, self.cost.transfer(
+                            tree_bytes(hit[1]), self.cost.bw_intra_node))
+                self.clock.advance(rb, "rollback", lane="downtime")
+                rep.rollback_s = rb
+                self.engine.step_count = step
+
+        def swap():
+            self.engine.swap_machine(failed, pairing[failed])
+
+        steps = [Step("detect", "detect", detect),
+                 Step("promote", "promote", promote,
+                      MigState.JOINERS_WARMED),
+                 Step("prepare:all", "prepare", plan,
+                      MigState.DELTA_PREPARED),
+                 Step("recover", "recover", recover, MigState.SWITCHING)]
+        steps += [Step(f"switch:{g.gid}", "switch",
+                       self._switch_step(run, rep, g))
+                  for g in affected]
+        steps += [Step("swap", "swap", swap),
+                  Step("commit", "commit", lambda: None,
+                       MigState.COMMITTED)]
+        run.set_steps(steps)
+
+        self._drive_run(run, rep, pairing, affected, set(), lanes0_dt)
         return rep
 
     def _reprepare_stale(self, affected: List[CommGroup],
@@ -344,13 +546,10 @@ class Controller:
         self.standbys.remove(mid)
         self.cluster[mid].fail()
         t0 = self.clock.now
-        free = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
-                if m.mid not in self.standbys] or \
-            [self.cluster.add_machine().mid]
-        standby_mod.prepare_general_standby(
-            self.engine, self.cluster[free[0]], self.clock, self.cost)
-        self.standbys.append(free[0])
-        rep.pairs = {mid: free[0]}
+        added = standby_mod.replenish(
+            self.engine, self.cluster, self.standbys, self.clock,
+            self.cost, target=len(self.standbys) + 1)
+        rep.pairs = {mid: added[0]}
         rep.overlap = self.clock.now - t0
         self.reports.append(rep)
         return rep
@@ -418,4 +617,19 @@ class Controller:
         victim = victim if victim is not None else self._training_mids()[0]
         self.cluster[victim].straggle_factor = slowdown
         rep = self.expected_migration([victim], train_during_prep=1)
+        return rep
+
+    def gpu_fault(self, victim: Optional[int] = None,
+                  inject: Optional[FaultPoint] = None) -> MigrationReport:
+        """GPU-granularity fault (§9 future work): one device on the
+        victim degrades instead of the machine dying. State stays
+        resident and the machine keeps training (slowed) while its
+        replacement is prepared off the critical path — the expected-
+        migration path with advance notice, not a kill, so downtime
+        matches a planned leave rather than a failure."""
+        victim = victim if victim is not None else self._training_mids()[0]
+        self.cluster[victim].degrade_gpu()
+        rep = self.expected_migration([victim], train_during_prep=1,
+                                      inject=inject)
+        rep.kind = "gpu_degrade"
         return rep

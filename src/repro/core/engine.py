@@ -805,6 +805,13 @@ class PipelineEngine:
         m.payload["opt"] = jax.tree.map(jnp.asarray, tree["opt"])
         m.payload["step"] = step
 
+    def epoch_signature(self) -> Dict[int, int]:
+        """Per-machine committed step counter across the training grid.
+        A consistent epoch — the invariant migration rollback must
+        restore — means every machine reports the same value."""
+        return {mid: int(self.cluster[mid].payload["step"])
+                for mid in self.grid.values()}
+
     def swap_machine(self, leaver: int, joiner: int) -> None:
         """Replace leaver with joiner in the grid + role bookkeeping."""
         d, s = self.coords_of(leaver)

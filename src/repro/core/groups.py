@@ -139,6 +139,24 @@ def apply_delta(group: CommGroup, plan: DeltaPlan) -> None:
     group.pending_members = None
 
 
+def revert_delta(group: CommGroup, plan: DeltaPlan) -> None:
+    """Exact inverse of apply_delta: re-splice the leavers back into
+    the rings (crash-consistent rollback of a partially-switched
+    migration). The plan is re-staged as pending so the group can
+    switch again without re-running phase 1."""
+    for c in plan.add:
+        group.connections.pop(c.key(), None)
+    for c in plan.drop:
+        group.connections[c.key()] = c
+    inverse = {j: l for l, j in plan.replace.items()}
+    group.members = [inverse.get(m, m) for m in plan.new_members]
+    group.state = GroupState.READY_TO_SWITCHOUT
+    group.pending_plan = plan
+    group.pending_members = list(plan.new_members)
+    assert group.validate_rings(), \
+        f"rollback left {group.gid} with broken rings"
+
+
 # ------------------------------------------------------------ layouts
 def build_groups(dp: int, pp: int, machine_grid: Dict[Tuple[int, int], int],
                  channels: int = 8) -> Dict[str, CommGroup]:

@@ -1,0 +1,183 @@
+"""Resumable migration state machine (crash-consistent switching).
+
+The controller's migration paths used to be straight-line call
+sequences; a fault landing *inside* them (during phase-1 delta prep,
+during sandboxed warmup, or between per-group switchovers) left groups
+half-switched with no way to recover short of a full re-init. This
+module makes the sequence an explicit state machine:
+
+    IDLE -> DELTA_PREPARED -> JOINERS_WARMED -> SWITCHING -> COMMITTED
+
+Each migration is a `MigrationRun`: an ordered list of named `Step`s
+with a journaled step log. Steps already executed are skipped on
+resume, so after a mid-switch fault the controller can
+
+  1. roll partially-switched groups back to a consistent epoch
+     (`rollback` replays the applied delta plans in reverse through
+     `two_phase.ccl_revert_switchover`),
+  2. settle the async ledger,
+  3. handle the interleaved failure (standby promotion),
+  4. drop exactly the journal steps the new failure set invalidated
+     (`invalidate`), and
+  5. `execute()` again — completed work is never redone.
+
+Fault injection is first-class: a `FaultPoint` armed on the run raises
+`MidSwitchFault` immediately before the matching step executes, which
+is how the campaign models faults at `during_prepare`,
+`during_warmup`, `mid_switchover` and `concurrent_second_failure`
+timings.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+
+class MigState(enum.Enum):
+    IDLE = "idle"
+    DELTA_PREPARED = "delta_prepared"      # phase-1 plans staged
+    JOINERS_WARMED = "joiners_warmed"      # sandboxed warmup done
+    SWITCHING = "switching"                # downtime window open
+    COMMITTED = "committed"
+    ABORTED = "aborted"                    # transient: fault being handled
+
+
+@dataclass
+class JournalEntry:
+    step: str                  # step name, or abort/revert/resume marker
+    state: str                 # machine state after the entry
+    t: float                   # SimClock time when journaled
+    info: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class Step:
+    """One resumable unit of a migration. `name` is stable across
+    replans (keyed by group gid / leaver mid, never by joiner identity)
+    so `MigrationRun.invalidate` can drop exactly the work a new
+    failure set made stale."""
+    name: str
+    kind: str                  # prepare|warmup|train|cascade|barrier|
+    #                          # xfer|switch|swap|detect|promote|
+    #                          # recover|commit
+    fn: Callable[[], None]
+    state_after: Optional[MigState] = None
+
+
+@dataclass
+class FaultPoint:
+    """Arms a fault at the `index`-th step of `kind` within a run: the
+    run raises MidSwitchFault immediately before that step executes
+    (once — `fired` latches)."""
+    kind: str
+    index: int = 0
+    victims: List[int] = field(default_factory=list)
+    fired: bool = False
+
+
+class MidSwitchFault(Exception):
+    """A failure landed inside a migration. Carries the journal step it
+    interrupted and the machines it killed/degraded."""
+
+    def __init__(self, step: str, victims: List[int]):
+        super().__init__(f"fault at {step}: victims {victims}")
+        self.step = step
+        self.victims = list(victims)
+
+
+class MigrationRun:
+    """Journaled, resumable execution of a migration's step list."""
+
+    def __init__(self, clock, fault: Optional[FaultPoint] = None,
+                 label: str = ""):
+        self.clock = clock
+        self.fault = fault
+        self.label = label
+        self.state = MigState.IDLE
+        self.steps: List[Step] = []
+        self.done: Set[str] = set()
+        self.journal: List[JournalEntry] = []
+        # groups switched by this run, in order, with the applied plan
+        # — exactly what rollback needs to revert them
+        self.switched: List[Tuple[Any, Any]] = []
+        self.resumes = 0
+
+    # --------------------------------------------------------- plumbing
+    def _log(self, step: str, **info) -> None:
+        self.journal.append(JournalEntry(step, self.state.value,
+                                         self.clock.now, dict(info)))
+
+    def set_steps(self, steps: List[Step]) -> None:
+        names = [s.name for s in steps]
+        assert len(names) == len(set(names)), "step names must be unique"
+        self.steps = steps
+
+    def record_switch(self, group, plan) -> None:
+        """Called by a switch step after apply_delta so rollback knows
+        which groups are live on new membership and how to revert."""
+        self.switched.append((group, plan))
+
+    def invalidate(self, *names: str) -> None:
+        """Drop journal steps the new failure set made stale; they
+        re-execute on the next pass."""
+        self.done -= set(names)
+
+    # -------------------------------------------------------- execution
+    def execute(self) -> "MigrationRun":
+        """Walk the step list. Done steps are skipped (resume); state
+        transitions are applied even for skipped steps so the machine
+        state is consistent after a resume. An armed FaultPoint raises
+        before its matching step runs."""
+        counts: Dict[str, int] = {}
+        for st in self.steps:
+            i = counts.get(st.kind, 0)
+            counts[st.kind] = i + 1
+            f = self.fault
+            if (f is not None and not f.fired and f.kind == st.kind
+                    and f.index == i):
+                f.fired = True
+                self.state = MigState.ABORTED
+                self._log(f"fault@{st.name}", victims=list(f.victims))
+                raise MidSwitchFault(st.name, f.victims)
+            if st.name in self.done:
+                if st.state_after is not None:
+                    self.state = st.state_after
+                continue
+            st.fn()
+            self.done.add(st.name)
+            if st.state_after is not None:
+                self.state = st.state_after
+            self._log(st.name)
+        return self
+
+    # --------------------------------------------------------- recovery
+    def _switches_complete(self) -> bool:
+        return all(s.name in self.done for s in self.steps
+                   if s.kind == "switch")
+
+    def rollback(self, revert_fn: Callable[[Any, Any], None],
+                 force: bool = False) -> int:
+        """Roll partially-switched groups back to the pre-switch epoch.
+
+        Only a *partial* switch is reverted (some groups live on new
+        membership, some on old — an inconsistent epoch); a fully
+        committed switchover survives the fault and the run resumes
+        from the swap steps instead. `force=True` reverts even a
+        complete switchover (a joiner died after its groups flipped).
+        Returns the number of groups reverted; their switch steps are
+        dropped from the journal so they re-run after replanning."""
+        if not self.switched or (self._switches_complete() and not force):
+            return 0
+        n = 0
+        for group, plan in reversed(self.switched):
+            revert_fn(group, plan)
+            self.done.discard(f"switch:{group.gid}")
+            self._log(f"revert:{group.gid}", members=list(group.members))
+            n += 1
+        self.switched.clear()
+        return n
+
+    def mark_resumed(self, fault: MidSwitchFault) -> None:
+        self.resumes += 1
+        self._log("resume", after=fault.step, resumes=self.resumes)

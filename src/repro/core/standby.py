@@ -14,7 +14,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.cluster.costmodel import CostModel, DEFAULT
-from repro.cluster.node import Machine, NodeStatus
+from repro.cluster.node import Cluster, Machine, NodeStatus
 from repro.cluster.simclock import SimClock
 from repro.core.engine import PipelineEngine, stage_type
 from repro.train.checkpoint import tree_bytes
@@ -74,6 +74,27 @@ def prepare_general_standby(engine: PipelineEngine, machine: Machine,
     machine.status = NodeStatus.STANDBY
     rep.prep_seconds = clock.now - t0
     return rep
+
+
+def replenish(engine: PipelineEngine, cluster: Cluster,
+              standbys: List[int], clock: SimClock,
+              cost: CostModel = DEFAULT, target: int = 1,
+              lane: str = "overlap") -> List[int]:
+    """Top the standby pool back up to `target` machines from the
+    elastic pool (growing the cluster if it is empty), preparing each
+    as a general standby off the critical path. Mutates `standbys` in
+    place and returns the newly prepared machine ids — shared by job
+    bootstrap and by standby-loss replacement."""
+    added: List[int] = []
+    while len(standbys) < target:
+        idle = [m.mid for m in cluster.by_status(NodeStatus.IDLE)
+                if m.mid not in standbys and m.is_healthy]
+        mid = idle[0] if idle else cluster.add_machine().mid
+        prepare_general_standby(engine, cluster[mid], clock, cost,
+                                lane=lane)
+        standbys.append(mid)
+        added.append(mid)
+    return added
 
 
 def promote_standby(engine: PipelineEngine, machine: Machine,

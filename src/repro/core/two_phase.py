@@ -25,7 +25,8 @@ from repro.cluster.costmodel import CostModel, DEFAULT
 from repro.cluster.node import Cluster, Machine
 from repro.cluster.simclock import SimClock
 from repro.core.groups import (CommGroup, DeltaPlan, GroupState,
-                               apply_delta, compute_delta_plan)
+                               apply_delta, compute_delta_plan,
+                               revert_delta)
 
 HOST_TOPO_BYTES = 512 * 1024       # topology tables per group (host)
 HOST_SOCK_BYTES = 64 * 1024        # per bootstrap peer (host)
@@ -149,6 +150,28 @@ def ccl_switchover(group: CommGroup, cluster: Cluster, clock: SimClock,
         cluster[mid].host.free(f"topo:{group.gid}", clock.now)
         cluster[mid].host.free(f"bootstrap:{group.gid}", clock.now)
     return rep
+
+
+def ccl_revert_switchover(group: CommGroup, plan: DeltaPlan,
+                          cluster: Cluster, clock: SimClock,
+                          cost: CostModel = DEFAULT,
+                          lane: str = "downtime") -> float:
+    """Rollback of an already-applied phase 2: re-splice the leavers
+    back into the rings (inverse delta) so a fault that lands between
+    per-group switchovers leaves every group on a consistent epoch.
+    The QP work mirrors the forward splice — the dropped connections
+    are re-established, machines in parallel — and the plan is
+    re-staged as pending, so the later re-switch needs no phase 1.
+    Returns the seconds charged."""
+    with clock.parallel(f"revert:{group.gid}", lane=lane) as p:
+        per_machine: Dict[int, int] = {}
+        for c in plan.drop:            # re-added on the way back
+            per_machine[c.src] = per_machine.get(c.src, 0) + 1
+            per_machine[c.dst] = per_machine.get(c.dst, 0) + 1
+        for mid, n in per_machine.items():
+            p.track(mid, cost.qp_setup * n)
+    revert_delta(group, plan)
+    return clock.phases[-1].duration
 
 
 def switchover_many(groups: List[CommGroup], cluster: Cluster,

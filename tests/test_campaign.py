@@ -15,9 +15,11 @@ from hypothesis import strategies as st
 
 from repro.core import campaign
 
-KINDS = {"expected", "failure", "straggler", "rebalance", "standby_loss"}
+KINDS = {"expected", "failure", "gpu_degrade", "straggler", "rebalance",
+         "standby_loss"}
 TIMINGS = {"between_iter", "pre_reduce", "post_reduce",
-           "during_migration", "cascade"}
+           "during_migration", "during_prepare", "during_warmup",
+           "mid_switchover", "concurrent_second_failure", "cascade"}
 RECOVERIES = {"migration", "standby", "ckpt_restart", "full_reinit",
               "replace"}
 
@@ -51,6 +53,11 @@ def test_reduced_matrix_is_subset():
     reduced = campaign.reduced_matrix(2, 2)
     assert {s.name for s in reduced} <= full
     assert {s.recovery for s in reduced} >= {"standby", "full_reinit"}
+    # the push-CI slice exercises the mid-switch state machine and the
+    # GPU-granular fault kind
+    assert {s.timing for s in reduced} >= {"during_warmup",
+                                           "mid_switchover"}
+    assert "gpu_degrade" in {s.kind for s in reduced}
 
 
 @given(st.dictionaries(st.sampled_from(["dp", "pp"]),
@@ -116,6 +123,24 @@ def test_mid_iteration_aborts_commit_nothing(reduced_results):
         assert by[name].lost_iterations == 0
         assert by[name].loss_parity
         assert by[name].recovery_path == "neighbor"
+
+
+@pytest.mark.slow
+def test_mid_switch_faults_resume_within_downtime_envelope(
+        reduced_results):
+    """Faults landing inside the switching machinery abort, roll back
+    and resume — with per-event downtime inside the same 1.5x envelope
+    as plain standby recovery, and bitwise parity preserved."""
+    by = {x.name: x for x in reduced_results}
+    summary = campaign.summarize(reduced_results)
+    for name in ("fail-during-warmup", "fail-mid-switchover"):
+        r = by[name]
+        assert r.resumes == 1, name        # exactly one abort/resume
+        assert r.loss_parity and r.lost_iterations == 0
+    assert by["gpu-degrade-first"].resumes == 0   # no abort: planned leave
+    assert by["gpu-degrade-first"].loss_parity
+    assert summary["mid_switch_max_over_median"] <= 1.5, summary
+    assert summary["mid_switch_claim_ok"], summary
 
 
 @pytest.mark.slow

@@ -1,0 +1,279 @@
+"""Crash-consistent switching: the resumable migration state machine.
+
+Fast part: MigrationRun mechanics (journal, fault points, done-step
+skipping, partial-switch rollback) and groups.revert_delta, with no
+engine.
+Slow part: abort-at-every-step — kill an expected migration at each
+journaled step kind on the real-exec engine and assert rollback
+restores a consistent epoch, the async ledger drains, and the resumed
+run reaches bitwise loss parity with an uninterrupted reference.
+"""
+import pytest
+
+from repro.cluster.simclock import SimClock
+from repro.core import campaign
+from repro.core.groups import (CommGroup, GroupState, apply_delta,
+                               compute_delta_plan, revert_delta)
+from repro.core.migration import (FaultPoint, MidSwitchFault, MigState,
+                                  MigrationRun, Step)
+
+
+# ------------------------------------------------ fast: run mechanics
+def _run_with(steps, fault=None):
+    run = MigrationRun(SimClock(), fault=fault)
+    run.set_steps(steps)
+    return run
+
+
+def test_steps_execute_in_order_and_journal():
+    seen = []
+    steps = [Step("a", "prepare", lambda: seen.append("a"),
+                  MigState.DELTA_PREPARED),
+             Step("b", "barrier", lambda: seen.append("b"),
+                  MigState.SWITCHING),
+             Step("c", "commit", lambda: seen.append("c"),
+                  MigState.COMMITTED)]
+    run = _run_with(steps).execute()
+    assert seen == ["a", "b", "c"]
+    assert run.state == MigState.COMMITTED
+    assert [e.step for e in run.journal] == ["a", "b", "c"]
+    assert run.journal[-1].state == "committed"
+
+
+def test_done_steps_skip_on_reexecute_but_state_still_applies():
+    calls = []
+    steps = [Step("a", "prepare", lambda: calls.append("a"),
+                  MigState.DELTA_PREPARED),
+             Step("b", "commit", lambda: calls.append("b"),
+                  MigState.COMMITTED)]
+    run = _run_with(steps)
+    run.execute()
+    run.state = MigState.IDLE
+    run.execute()                       # resume: nothing re-runs
+    assert calls == ["a", "b"]
+    assert run.state == MigState.COMMITTED
+
+
+def test_fault_point_fires_once_at_matching_occurrence():
+    calls = []
+    fp = FaultPoint("switch", 1, victims=[7])
+    steps = [Step("switch:g0", "switch", lambda: calls.append("g0")),
+             Step("switch:g1", "switch", lambda: calls.append("g1")),
+             Step("commit", "commit", lambda: calls.append("c"))]
+    run = _run_with(steps, fault=fp)
+    with pytest.raises(MidSwitchFault) as ei:
+        run.execute()
+    assert ei.value.step == "switch:g1" and ei.value.victims == [7]
+    assert calls == ["g0"]              # fired BEFORE the second switch
+    assert run.journal[-1].step == "fault@switch:g1"
+    run.execute()                       # fired latches: resume completes
+    assert calls == ["g0", "g1", "c"]
+
+
+def test_invalidate_reruns_exactly_the_dropped_steps():
+    calls = []
+    steps = [Step("p", "prepare", lambda: calls.append("p")),
+             Step("s", "switch", lambda: calls.append("s"))]
+    run = _run_with(steps).execute()
+    run.invalidate("p", "nonexistent")
+    run.execute()
+    assert calls == ["p", "s", "p"]
+
+
+def _group(n=6, channels=2):
+    g = CommGroup("dp.s0", "dp", list(range(n)), channels)
+    g.establish_all()
+    return g
+
+
+def test_revert_delta_is_exact_inverse():
+    g = _group()
+    before = (list(g.members), dict(g.connections))
+    plan = compute_delta_plan(g, {2: 10})
+    apply_delta(g, plan)
+    assert 10 in g.members
+    revert_delta(g, plan)
+    assert (g.members, g.connections) == before
+    assert g.validate_rings()
+    # the plan is re-staged so the re-switch needs no phase 1
+    assert g.state == GroupState.READY_TO_SWITCHOUT
+    assert g.pending_plan is plan
+
+
+def test_rollback_reverts_only_partial_switches():
+    reverted = []
+    steps = [Step("switch:a", "switch", lambda: None),
+             Step("switch:b", "switch", lambda: None)]
+
+    class _G:
+        def __init__(self, gid):
+            self.gid = gid
+            self.members = []
+
+    ga, gb = _G("a"), _G("b")
+    run = _run_with(steps)
+    run.done.add("switch:a")
+    run.record_switch(ga, "plan_a")
+    # one of two switches done -> partial -> revert
+    assert run.rollback(lambda g, p: reverted.append((g.gid, p))) == 1
+    assert reverted == [("a", "plan_a")]
+    assert "switch:a" not in run.done and not run.switched
+
+    # both done -> complete switchover survives the fault
+    run2 = _run_with(steps)
+    run2.done |= {"switch:a", "switch:b"}
+    run2.record_switch(ga, "pa")
+    run2.record_switch(gb, "pb")
+    assert run2.rollback(lambda g, p: reverted.append((g.gid, p))) == 0
+    assert run2.done == {"switch:a", "switch:b"}
+    # ...unless forced (a joiner died after its groups flipped)
+    assert run2.rollback(lambda g, p: reverted.append((g.gid, p)),
+                         force=True) == 2
+    # reverse order: last switched reverts first
+    assert reverted[-2:] == [("b", "pb"), ("a", "pa")]
+
+
+# -------------------------------- slow: abort-at-every-journaled-step
+CFG = campaign.CampaignCfg(warmup_iters=1, total_iters=3)
+
+# every step kind the expected-migration journal contains, including
+# both the nothing-switched (switch idx 0) and the partially-switched
+# (switch idx 1 -> rollback) cases
+ABORT_POINTS = [("prepare", 1), ("warmup", 0), ("barrier", 0),
+                ("xfer", 0), ("switch", 0), ("switch", 1), ("swap", 0)]
+
+
+@pytest.fixture(scope="module")
+def reference():
+    return campaign.reference_run(CFG)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,idx", ABORT_POINTS)
+def test_abort_at_step_rolls_back_and_resumes_to_parity(kind, idx,
+                                                        reference):
+    ctl = campaign.build_controller(CFG, standby_count=1)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    victim = ctl.engine.grid[(1, 0)]
+    rep = ctl.expected_migration([leaver],
+                                 inject=FaultPoint(kind, idx, [victim]))
+    # the fault fired, was journaled, and the run resumed to commit
+    assert rep.resumes == 1
+    assert any(e.startswith("fault@") for e in rep.journal)
+    assert ctl.last_run.state == MigState.COMMITTED
+    # a partially-switched abort must journal the epoch rollback
+    if (kind, idx) == ("switch", 1):
+        assert any(e.startswith("revert:") for e in rep.journal)
+    # async ledger drained to zero pending ops
+    assert ctl.clock.pending_async() == 0
+    # consistent epoch: every group active on live members, rings whole
+    live = set(ctl.engine.grid.values())
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.pending_plan is None
+        assert set(g.members) <= live
+        assert g.validate_rings(), g.gid
+    assert len(set(ctl.engine.epoch_signature().values())) == 1
+    # neither victim nor leaver still trains; the retry converges
+    assert victim not in live and leaver not in live
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert set(losses) == set(reference)
+    assert all(losses[k] == reference[k] for k in reference), \
+        "resumed migration must be bitwise transparent"
+
+
+@pytest.mark.slow
+def test_concurrent_second_failure_mid_switch(reference):
+    """Two victims in different groups land between per-group
+    switchovers; both recover off one abort/resume cycle."""
+    ctl = campaign.build_controller(CFG, standby_count=2)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    victims = [ctl.engine.grid[(1, 0)], ctl.engine.grid[(0, 0)]]
+    rep = ctl.expected_migration([leaver],
+                                 inject=FaultPoint("switch", 1, victims))
+    assert rep.resumes == 1
+    assert not ctl.standbys                  # both standbys promoted
+    live = set(ctl.engine.grid.values())
+    assert not any(v in live for v in victims)
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_joiner_death_mid_switch_reships_state(reference):
+    """Regression: the joiner itself dies between per-group
+    switchovers. The run must force-revert, allocate a replacement,
+    re-warm it, RE-SHIP the leaver's state (the first transfer died
+    with the joiner) and resume to bitwise parity."""
+    ctl = campaign.build_controller(CFG, standby_count=1)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    joiner = ctl._alloc_joiners(1)[0]
+    rep = ctl.expected_migration(
+        [leaver], joiners=[joiner],
+        inject=FaultPoint("switch", 1, [joiner]))
+    assert rep.resumes == 1
+    # state was transferred twice: once to the dead joiner, once to
+    # its replacement — and the journal shows the second xfer
+    assert rep.journal.count("xfer") == 2
+    assert not ctl.cluster[joiner].alive
+    replacement = rep.pairs[leaver]
+    assert replacement != joiner
+    assert replacement in ctl.engine.grid.values()
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_elastic_recovery_mid_prepare_never_reuses_pending_joiner(
+        reference):
+    """Regression: joiners are reserved (PREPARING) at allocation. With
+    no standby, a mid-prepare fault recovery allocates an elastic
+    joiner — it must not be handed the machine already promised to the
+    in-flight migration (which used to stay IDLE until warmup,
+    double-assigning two grid slots to one machine)."""
+    ctl = campaign.build_controller(CFG, standby_count=0)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    victim = ctl.engine.grid[(1, 0)]
+    rep = ctl.expected_migration([leaver],
+                                 inject=FaultPoint("prepare", 1, [victim]))
+    mids = list(ctl.engine.grid.values())
+    assert len(mids) == len(set(mids)), \
+        f"one machine assigned to two grid slots: {mids}"
+    assert rep.pairs[leaver] in mids
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_gpu_degrade_migrates_with_expected_downtime(reference):
+    """A GPU-granular fault degrades one device; the machine keeps
+    training during prep and leaves via the expected path."""
+    ctl = campaign.build_controller(CFG, standby_count=0)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    victim = ctl.engine.grid[(0, 0)]
+    step0, nloss0 = ctl.engine.step_count, len(ctl.engine.losses)
+    rep = ctl.gpu_fault(victim)
+    # the iteration committed during prep lands in the loss map too
+    for i, st in enumerate(range(step0, ctl.engine.step_count)):
+        losses[st] = ctl.engine.losses[nloss0 + i]
+    assert rep.kind == "gpu_degrade"
+    m = ctl.cluster[victim]
+    assert m.failed_gpus == 1 and m.straggle_factor > 1.0
+    assert m.alive                            # degraded, not dead
+    assert victim not in ctl.engine.grid.values()
+    # degraded machines never return to the job as joiners
+    assert victim not in ctl._alloc_joiners(3)
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)

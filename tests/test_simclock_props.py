@@ -1,7 +1,9 @@
 """Property tests for the SimClock async-ledger invariants (fast, no
-XLA): per-channel conservation (exposed + hidden == issued once the
-channel is settled), drain idempotence, and overlap_fraction bounds —
-driven through randomized issue/advance/wait schedules."""
+XLA): per-channel conservation (exposed + hidden == issued exactly,
+hidden never negative, queueing delay in its own bucket), drain
+idempotence, overlap_fraction bounds, crash-consistent parallel
+phases, and exact window clipping — driven through randomized
+issue/advance/wait schedules."""
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -21,8 +23,11 @@ ops = st.lists(
 @settings(max_examples=60)
 def test_ledger_conserves_per_channel(schedule):
     """After a drain, every channel's issued seconds split exactly
-    into exposed + hidden (waits happen in issue order, the only
-    pattern the runtime uses)."""
+    into exposed + hidden, with hidden >= 0 (queueing delay lands in
+    its own non-negative bucket, never as negative hidden time).
+    Waits happen out of issue order here on purpose — the schedule may
+    wait an op that queued behind another, the exact case that used to
+    corrupt comm_hidden."""
     c = SimClock()
     handles = {ch: [] for ch in CHANNELS}
     for kind, ch, secs in schedule:
@@ -31,16 +36,35 @@ def test_ledger_conserves_per_channel(schedule):
         elif kind == "advance":
             c.advance(secs, "work")
         elif handles[ch]:
-            c.wait_async(handles[ch].pop(0))
+            c.wait_async(handles[ch].pop())     # LIFO: waits the queued op
     c.drain_async()
     assert c.pending_async() == 0
     for ch, issued in c.issued_by_channel.items():
         exposed = c.exposed_by_channel.get(ch, 0.0)
         hidden = c.hidden_by_channel.get(ch, 0.0)
-        assert exposed >= 0.0 and hidden >= -1e-12, (ch, exposed, hidden)
+        queued = c.queued_by_channel.get(ch, 0.0)
+        assert exposed >= 0.0 and hidden >= 0.0 and queued >= 0.0, \
+            (ch, exposed, hidden, queued)
         assert exposed + hidden == pytest.approx(issued), ch
+    assert c.comm_hidden >= 0.0 and c.comm_queued >= 0.0
     assert c.comm_exposed + c.comm_hidden == pytest.approx(
         sum(c.issued_by_channel.values()))
+
+
+def test_queued_op_does_not_go_negative_hidden():
+    """Regression: waiting an op that queued behind the channel used to
+    charge the queueing delay as exposure and drive hidden negative."""
+    c = SimClock()
+    c.issue_async("ch", 2.0, "first")
+    h2 = c.issue_async("ch", 3.0, "second")     # queues behind first
+    blocked = c.wait_async(h2)                   # waited immediately
+    assert blocked == pytest.approx(5.0)         # 2s queue + 3s transfer
+    assert c.comm_exposed == pytest.approx(3.0)  # only the op's own cost
+    assert c.comm_queued == pytest.approx(2.0)   # queue delay, own bucket
+    assert c.comm_hidden == 0.0                  # NOT -2.0
+    c.drain_async()
+    assert c.exposed_by_channel["ch"] + c.hidden_by_channel["ch"] == \
+        pytest.approx(c.issued_by_channel["ch"])
 
 
 @given(ops)
@@ -76,3 +100,55 @@ def test_channels_concurrent_serialized_within(plan):
     assert c.now == pytest.approx(max(sum(v) for v in plan.values()))
     total = sum(sum(v) for v in plan.values())
     assert c.comm_exposed + c.comm_hidden == pytest.approx(total)
+
+
+# ------------------------------------------- crash-consistent parallel
+def test_parallel_records_partial_phase_on_exception():
+    """Regression: an exception inside a tracked parallel body (a
+    mid-switch fault injection) used to drop the phase record and leave
+    now / lane totals inconsistent."""
+    c = SimClock()
+    with pytest.raises(RuntimeError):
+        with c.parallel("phase2:batch", lane="downtime") as p:
+            p.track(0, 1.5)
+            p.track(1, 0.5)
+            raise RuntimeError("fault mid-switch")
+    assert [ph.name for ph in c.phases] == ["phase2:batch"]
+    assert c.phases[-1].duration == pytest.approx(1.5)
+    assert c.now == pytest.approx(1.5)
+    assert c.lane_total("downtime") == pytest.approx(1.5)
+
+
+# ------------------------------------------------------ window clipping
+def test_window_clips_straddling_phases():
+    c = SimClock()
+    c.advance(2.0, "a", lane="downtime")      # [0, 2)
+    c.advance(3.0, "b", lane="downtime")      # [2, 5)
+    c.advance(1.0, "c", lane="downtime")      # [5, 6)
+    win = c.window(1.0, 5.5, lane="downtime")
+    assert [p.name for p in win] == ["a", "b", "c"]
+    # phase a straddles t0: only its in-window second counts
+    assert win[0].start == 1.0 and win[0].duration == pytest.approx(1.0)
+    # phase b fully inside
+    assert win[1].duration == pytest.approx(3.0)
+    # phase c straddles t1: clipped, not counted whole (and a phase
+    # starting before t0 is not dropped entirely)
+    assert win[2].duration == pytest.approx(0.5)
+    assert sum(p.duration for p in win) == pytest.approx(4.5)
+
+
+@given(st.lists(st.floats(0.1, 2.0), min_size=1, max_size=10),
+       st.floats(0.0, 10.0))
+@settings(max_examples=40)
+def test_window_partition_is_exact(durs, a):
+    """Splitting [0, total] at any point conserves total duration —
+    boundary-straddling phases contribute exactly once."""
+    c = SimClock()
+    for i, d in enumerate(durs):
+        c.advance(d, f"p{i}")
+    total = c.now
+    cut = min(a, total)
+    left = sum(p.duration for p in c.window(0.0, cut))
+    right = sum(p.duration for p in c.window(cut, total))
+    assert left + right == pytest.approx(total)
+    assert left == pytest.approx(cut)
