@@ -47,14 +47,22 @@ def run(reduced: bool = True) -> None:
           f"scenarios={s['n_scenarios']}"
           f";flat_within={s['standby_flat_within']:.2f}"
           f";reinit_over={s['full_reinit_over_median']:.1f}"
+          f";victim_sets={s['n_victim_set_scenarios']}"
+          f"(K<={s['max_victim_set_k']})"
+          f";reshard_vs_migrate={s['reshard_vs_migrate']:.2f}"
+          f";overflow={len(s['overflow_fallback_scenarios'])}"
           f";parity={s['all_loss_parity']}")
     assert s["all_loss_parity"], "a scenario diverged from the reference"
     # flat_claim_ok covers the standby envelope, the full-reinit gap
-    # AND the mid-switch/GPU-granular/concurrent 1.5x envelope
-    # (summary["mid_switch_claim_ok"] breaks the last one out)
+    # AND the 1.5x envelope over mid-switch / GPU-granular / K-victim-
+    # set / re-shard scenarios (summary["mid_switch_claim_ok"] breaks
+    # the last one out; standby-overflow ckpt fallbacks are exempt but
+    # listed in summary["overflow_fallback_scenarios"])
     assert s["flat_claim_ok"], s
     if not reduced:
-        assert s["n_scenarios"] >= 25, s["n_scenarios"]
+        assert s["n_scenarios"] >= 33, s["n_scenarios"]
+        assert s["n_victim_set_scenarios"] >= 8, s
+        assert s["max_victim_set_k"] >= 5, s
     print(f"BENCH_downtime.json written -> {json_path}")
 
 

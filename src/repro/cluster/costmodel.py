@@ -54,6 +54,16 @@ class CostModel:
     # ---- per-group channel count (NCCL channels per comm group)
     channels_per_group: int = 8
 
+    # ---- GPU-granular fault policy (§9 / ElasWave-style re-shard)
+    # A machine that loses some-but-not-all devices can either re-split
+    # its shard across the survivors in place (cheap: DP-peer re-fetch
+    # of the lost slices + NVLink re-layout + QP re-bind, but the
+    # machine trains slowed until maintenance) or migrate away whole
+    # (expected-migration downtime, full speed after). The auto policy
+    # re-shards while surviving/total >= this fraction; campaigns sweep
+    # it to compare the two recoveries' downtime.
+    reshard_min_fraction: float = 0.5
+
     # ---- gradient coalescing (NCCL/DDP-style flat buckets)
     # A contiguous buffer is chunked into pipelined buckets: one full
     # RTT per collective launch, plus a small per-extra-bucket launch

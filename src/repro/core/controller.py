@@ -22,7 +22,8 @@ from repro.core import state_sync
 from repro.core import two_phase
 from repro.core.engine import (IterationInterrupt, PipelineEngine,
                                stage_role_key, stage_type)
-from repro.core.groups import CommGroup, GroupState, compute_delta_plan
+from repro.core.groups import (CommGroup, GroupState, compute_delta_plan,
+                               compute_reshard_plan)
 from repro.core.migration import (FaultPoint, MidSwitchFault, MigState,
                                   MigrationRun, Step)
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
@@ -47,6 +48,9 @@ class MigrationReport:
     state_path: str = ""
     lost_iterations: int = 0
     resumes: int = 0                       # mid-switch abort/resume cycles
+    # victims recovered via the checkpoint-restart baseline because the
+    # standby pool was exhausted mid-cycle (overflow fallback)
+    ckpt_fallbacks: int = 0
     journal: List[str] = field(default_factory=list)
 
     @property
@@ -75,6 +79,7 @@ class Controller:
         self.seed = engine.seed
         self.imc = InMemoryCheckpoint()
         self.storage: Dict[int, Tuple[int, dict]] = {}
+        self.storage_coords: Dict[int, Tuple[int, int]] = {}
         self.standbys: List[int] = []
         self.reports: List[MigrationReport] = []
         self.last_run: Optional[MigrationRun] = None
@@ -105,6 +110,10 @@ class Controller:
         for mid in self._training_mids():
             self.storage[mid] = (self.engine.step_count,
                                  self.engine.get_state(mid))
+            # grid slot at save time: a later restart must restore a
+            # slot's state onto its CURRENT occupant even if the saved
+            # machine was swapped out by an intervening recovery
+            self.storage_coords[mid] = self.engine.coords_of(mid)
 
     def train(self, iterations: int, ckpt_every: int = 1) -> List[float]:
         out = []
@@ -119,13 +128,21 @@ class Controller:
                 if any(m in g.members for m in mids)]
 
     def _alloc_joiners(self, n: int) -> List[int]:
-        # degraded / straggling leavers return to the pool but must not
-        # be handed back to the job as joiners
-        idle = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
-                if m.mid not in self.standbys and m.is_healthy]
-        while len(idle) < n:
-            idle.append(self.cluster.add_machine().mid)
-        return idle[:n]
+        """Set-aware allocation: every machine handed out is RESERVED
+        (PREPARING) before the next pick, so a multi-victim recovery
+        allocating replacements one at a time — possibly interleaved
+        with standby replenishment or an in-flight migration's reserved
+        joiners — can never double-assign one machine to two grid
+        slots. Degraded / straggling leavers return to the pool but
+        must not be handed back to the job as joiners."""
+        out: List[int] = []
+        for _ in range(n):
+            idle = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
+                    if m.mid not in self.standbys and m.is_healthy]
+            mid = idle[0] if idle else self.cluster.add_machine().mid
+            self.cluster[mid].status = NodeStatus.PREPARING
+            out.append(mid)
+        return out
 
     # ----------------------------------------------- expected interruption
     def expected_migration(self, leavers: List[int],
@@ -272,6 +289,7 @@ class Controller:
             f"armed FaultPoint {run.fault} never matched a step"
         rep.downtime = self.clock.lane_total("downtime") - lanes0_dt
         rep.resumes = run.resumes
+        rep.ckpt_fallbacks = run.ckpt_fallbacks
         rep.journal = [e.step for e in run.journal]
         self.last_run = run
         self.reports.append(rep)
@@ -280,11 +298,21 @@ class Controller:
                      g: CommGroup) -> Callable[[], None]:
         """Per-group phase-2 step shared by every migration path: the
         applied plan is recorded on the run so rollback can revert it,
-        and the QP delta accrues on the report."""
+        and the QP delta accrues on the report. A group left with no
+        staged plan is skipped — a recovery inside this run already
+        flipped it (or dissolved the pair it was staged for), and the
+        replanning pass stages a fresh plan whenever real work remains.
+        Re-shard plans splice through ccl_reshard_switchover."""
         def fn():
             plan = g.pending_plan
-            r = two_phase.ccl_switchover(g, self.cluster, self.clock,
-                                         self.cost)
+            if plan is None:
+                return
+            if plan.kind == "reshard":
+                r = two_phase.ccl_reshard_switchover(
+                    g, self.cluster, self.clock, self.cost)
+            else:
+                r = two_phase.ccl_switchover(g, self.cluster, self.clock,
+                                             self.cost)
             run.record_switch(g, plan)
             rep.ccl_phase2_s = max(rep.ccl_phase2_s, r.phase2_time)
             rep.qps_added += r.qps_added
@@ -297,46 +325,163 @@ class Controller:
                             pairing: Dict[int, int],
                             affected: List[CommGroup],
                             xferred: set) -> None:
-        """Crash-consistent abort + resume for a fault that landed
-        inside a migration: revert partially-switched groups to the
-        pre-switch epoch, settle the async ledger inside the downtime
-        window, recover every victim, drop exactly the journal steps
-        the new failure set invalidated, and mark the run resumable."""
-        assert all(v not in pairing for v in fault.victims), \
-            "leaver victims are not modeled (the leaver is departing " \
-            "anyway — fail the joiner or a stayer instead)"
-        joiner_victims = [v for v in fault.victims
-                          if v in pairing.values()]
-        train_victims = [v for v in fault.victims
-                         if v not in pairing.values()]
-        # joiner replacement is modeled only on the expected path and
-        # only before the joiner was swapped into the grid (afterwards
-        # it is an ordinary training machine)
-        assert not joiner_victims or run.label == "expected", \
-            "a joiner dying inside a failure recovery is not modeled"
+        """Crash-consistent abort + resume for an arbitrary victim SET
+        landing inside a migration: one rollback-replan-resume cycle
+        absorbs K concurrent failures wherever they hit — stayers, DP
+        peers, a standby, the leaver itself, or the joiner (on both
+        the expected and the failure-recovery path). Partially-switched
+        groups revert to the pre-switch epoch, the async ledger settles
+        inside the downtime window, every victim is recovered in role
+        order (standby -> leaver -> joiner -> training machines), and
+        exactly the journal steps the new failure set invalidated are
+        dropped before the run resumes. When the victims outnumber the
+        standby pool and no in-memory redundancy exists, the overflow
+        falls back to the checkpoint-restart baseline (counted on the
+        report as `ckpt_fallbacks`)."""
+        step_names = {s.name for s in run.steps}
+        in_grid = set(self.engine.grid.values())
+        victims = list(dict.fromkeys(fault.victims))
+        standby_victims = [v for v in victims if v in self.standbys]
+        leaver_victims = [v for v in victims if v in pairing]
+        # a joiner already swapped into the grid is an ordinary
+        # training machine; only a not-yet-swapped joiner is replaced
+        joiner_victims = [v for v in victims if v in pairing.values()
+                          and v not in in_grid]
+        train_victims = [v for v in victims if v in in_grid
+                         and v not in leaver_victims
+                         and v not in standby_victims]
+        pool_victims = [v for v in victims
+                        if v not in standby_victims + leaver_victims
+                        + joiner_victims + train_victims]
         done_before = set(run.done)
         # a dead joiner invalidates even a fully-completed switchover
         run.rollback(lambda g, plan: two_phase.ccl_revert_switchover(
             g, plan, self.cluster, self.clock, self.cost),
             force=bool(joiner_victims))
         self.clock.drain_async(lane="downtime")
+        # the whole set is dead from the instant the fault fires: fail
+        # every machine and drop its in-memory checkpoint contributions
+        # BEFORE any recovery runs, so one victim's recovery can never
+        # read host memory that died with another victim
+        for v in victims:
+            self.cluster[v].fail()
+            self.imc.drop_node(v)
+        # standby victims first: a dead standby must never be promoted
+        # for a victim recovered later in this same cycle
+        for v in standby_victims:
+            self.standbys.remove(v)
+        vset = set(victims)
+        for v in leaver_victims:
+            # benign ONLY if the shipped state survives the fault: the
+            # receiving joiner must not be in the victim set itself
+            shipped_alive = v in xferred and pairing.get(v) not in vset
+            if shipped_alive or f"swap:{v}" in run.done:
+                # state already shipped to a live joiner (or the
+                # joiner already swapped in): the leaver was departing
+                # anyway and its bytes live on — its death costs
+                # nothing beyond the machine
+                continue
+            # state not shipped (or it died with the joiner): the pair
+            # dissolves — a still-alive reserved joiner returns to the
+            # pool and the leaver recovers like any failed training
+            # machine (its leaver-keyed steps are marked done so the
+            # resumed pass skips them; recovery itself goes through
+            # the same availability-ordered loop as the other training
+            # victims, overflow fallback included)
+            j = pairing.pop(v)
+            jm = self.cluster[j]
+            if jm.alive and jm.status == NodeStatus.PREPARING:
+                jm.status = NodeStatus.IDLE
+            for name in (f"warmup:{v}", f"swap:{v}"):
+                if name in step_names:
+                    run.done.add(name)
+            xferred.discard(v)
+            train_victims.append(v)
         for v in joiner_victims:
             stale_leavers = [l for l, j in pairing.items() if j == v]
-            self.cluster[v].fail()
+            if "promote" in step_names:
+                # failure-recovery path: the promoted standby (or
+                # elastic joiner) died before its swap — re-promote and
+                # re-ship state on the next pass. Dropping the stale
+                # pairing entry (promote re-sets it) also voids every
+                # staged plan referencing the dead joiner, so the
+                # replanning pass below re-stages them.
+                assert "swap" not in run.done, \
+                    "joiner already swapped into the grid; it must be " \
+                    "recovered as a training-machine victim"
+                for l in stale_leavers:
+                    pairing.pop(l, None)
+                run.invalidate("promote", "prepare:all", "recover")
+                continue
             for l in stale_leavers:
                 assert f"swap:{l}" not in run.done, \
                     "joiner already swapped into the grid; it must be " \
                     "recovered as a training-machine victim"
                 pairing[l] = self._alloc_joiners(1)[0]
-                self.cluster[pairing[l]].status = NodeStatus.PREPARING
                 run.invalidate(f"warmup:{l}")
                 xferred.discard(l)
             # the xfer step re-runs but only re-ships the pairs just
             # discarded from `xferred` (state never reached the dead
             # joiner); pairs already shipped to live joiners keep theirs
             run.invalidate("xfer")
-        for v in train_victims:
-            self.unexpected_failure(v)
+        def recoverable(v):
+            # fast state sources: a surviving in-memory checkpoint
+            # replica, or a live DP peer of the same stage (bitwise-
+            # identical state — covers victim sets whose members held
+            # each other's checkpoint replicas), or a storage
+            # checkpoint taken at the current step
+            return ((self.per_iteration_ckpt
+                     and self.imc.get(v) is not None)
+                    or state_sync.live_dp_peer(self.engine, v) is not None
+                    or (v in self.storage and
+                        self.storage[v][0] == self.engine.step_count))
+
+        # greedy order by state availability: recovering a victim can
+        # resurrect the fast state source of another (a freshly
+        # promoted standby IS the missing DP peer for the other rank
+        # of its stage), so re-evaluate after every recovery. The fast
+        # path is gated on a promotion resource existing (standby pool
+        # or per-iteration redundancy) — EXCEPT when no storage
+        # checkpoint exists, in which case a recoverable victim must
+        # take the fast path (the baseline is impossible anyway) — and
+        # re-opens after a restart, whose grid-wide restore makes the
+        # storage snapshot current for every remaining victim.
+        remaining = list(train_victims)
+        restarted = False
+        while remaining:
+            pick = None
+            if (self.standbys or self.per_iteration_ckpt or restarted
+                    or not self.storage):
+                pick = next((v for v in remaining if recoverable(v)),
+                            None)
+            if pick is not None:
+                remaining.remove(pick)
+                self.unexpected_failure(pick)
+                continue
+            # standby pool exhausted with no in-memory redundancy (or
+            # every fast state source died with the victim set): an
+            # elastic joiner could not re-sync the survivors, so the
+            # honest recovery is the checkpoint-restart baseline —
+            # ONE restart window, recorded per scenario in the
+            # downtime report rather than hidden inside a cheap-
+            # looking elastic promotion; the victims after it re-sync
+            # from the just-restored epoch without a second window
+            v = remaining.pop(0)
+            assert self.storage, \
+                "unrecoverable victim: no checkpoint replica, no live " \
+                "DP peer and no storage checkpoint " \
+                "(save_to_storage() was never called)"
+            self.checkpoint_restart(v)
+            run.ckpt_fallbacks += 1
+            restarted = True
+        # pool_victims need no recovery (already failed above)
+        # replace every standby the fault killed, off the critical path
+        # (overlapped with the resumed preparation work)
+        if standby_victims:
+            standby_mod.replenish(
+                self.engine, self.cluster, self.standbys, self.clock,
+                self.cost,
+                target=len(self.standbys) + len(standby_victims))
         # re-plan: drop the journal steps for any group whose staged
         # delta the recovery invalidated (plan cleared by a victim's
         # switchover, membership changed, or joiner replaced)
@@ -583,9 +728,22 @@ class Controller:
         rep.pairs = {failed: j}
         jm = self.cluster[j]
         step = None
+        grid_now = set(self._training_mids())
         for mid, (st, state) in self.storage.items():
             step = st
-            target = j if mid == failed else mid
+            if mid == failed:
+                target = j
+            elif mid in grid_now:
+                target = mid
+            else:
+                # the saved machine was swapped out by an intervening
+                # recovery: restore its slot's CURRENT occupant, so the
+                # whole grid lands on the storage epoch even when that
+                # occupant had been re-synced to a newer step
+                coords = self.storage_coords.get(mid)
+                target = self.engine.grid.get(coords) if coords else None
+                if target is None or target == j:
+                    continue
             self.engine.set_state(target, state)
             rep.state_bytes += tree_bytes(state)
         self.engine.swap_machine(failed, j)
@@ -620,16 +778,105 @@ class Controller:
         return rep
 
     def gpu_fault(self, victim: Optional[int] = None,
-                  inject: Optional[FaultPoint] = None) -> MigrationReport:
-        """GPU-granularity fault (§9 future work): one device on the
-        victim degrades instead of the machine dying. State stays
-        resident and the machine keeps training (slowed) while its
-        replacement is prepared off the critical path — the expected-
-        migration path with advance notice, not a kill, so downtime
-        matches a planned leave rather than a failure."""
+                  inject: Optional[FaultPoint] = None,
+                  policy: str = "migrate",
+                  lose: int = 1) -> MigrationReport:
+        """GPU-granularity fault (§9 future work): `lose` devices on
+        the victim degrade instead of the machine dying. Two recovery
+        policies, selectable per fault (Chameleon-style):
+
+        - "migrate": state stays resident and the machine keeps
+          training (slowed) while its replacement is prepared off the
+          critical path — the expected-migration path with advance
+          notice, so downtime matches a planned leave.
+        - "reshard": the machine stays in the grid and re-splits its
+          shard across the surviving devices in place (ElasWave-style)
+          — cheaper downtime, degraded throughput until maintenance.
+        - "auto": re-shard while the surviving-device fraction is at
+          least CostModel.reshard_min_fraction, else migrate.
+        """
         victim = victim if victim is not None else self._training_mids()[0]
-        self.cluster[victim].degrade_gpu()
+        m = self.cluster[victim]
+        m.degrade_gpu(lose)
+        if policy == "auto":
+            surviving = (m.gpus - m.failed_gpus) / m.gpus
+            policy = ("reshard"
+                      if surviving >= self.cost.reshard_min_fraction
+                      else "migrate")
+        if policy == "reshard":
+            return self.reshard_recovery(victim, inject=inject)
+        assert policy == "migrate", policy
         rep = self.expected_migration([victim], train_during_prep=1,
                                       inject=inject)
         rep.kind = "gpu_degrade"
+        return rep
+
+    def reshard_recovery(self, victim: int,
+                         inject: Optional[FaultPoint] = None
+                         ) -> MigrationReport:
+        """Intra-machine re-sharding recovery for a partial-GPU fault:
+        the victim keeps its grid slot and re-splits its shard across
+        its surviving devices — lost slices re-fetch from the DP
+        replica, survivors re-layout over NVLink, and the victim's
+        channel QPs re-bind through a re-shard delta
+        (groups.compute_reshard_plan / two_phase.ccl_reshard_switchover)
+        instead of a membership splice. Driven as a journaled run, so a
+        concurrent fault landing inside the re-shard aborts, recovers
+        and resumes like any other migration."""
+        rep = MigrationReport("gpu_reshard")
+        affected = self._affected_groups([victim])
+        lanes0 = {ln: self.clock.lane_total(ln)
+                  for ln in ("downtime", "overlap")}
+        run = MigrationRun(self.clock, fault=inject,
+                           label=f"reshard:{victim}")
+
+        def gone():
+            # the re-sharding machine itself died mid-reshard and a
+            # recovery replaced it: the remaining re-shard steps are
+            # moot (the replacement holds a whole, healthy shard)
+            return victim not in self.engine.grid.values()
+
+        def plan():
+            # local-only planning, overlapped with (degraded) training:
+            # the machine knows its own surviving devices, so staging
+            # the re-shard delta is ms-level like the standby delta plan
+            todo = [g for g in affected
+                    if f"switch:{g.gid}" not in run.done
+                    and victim in g.members]
+            for g in todo:
+                p = compute_reshard_plan(g, victim)
+                g.pending_plan = p
+                g.pending_members = p.new_members
+                g.state = GroupState.READY_TO_SWITCHOUT
+            self.clock.advance(0.05 * len(todo), "reshard_plan",
+                               lane="overlap")
+
+        def barrier():
+            rep.overlap = self.clock.lane_total("overlap") \
+                - lanes0["overlap"]
+            self.clock.advance(self.cost.iteration_barrier, "drain",
+                               lane="downtime")
+            rep.barrier += self.cost.iteration_barrier
+
+        def resplit():
+            if gone():
+                return
+            tr = state_sync.reshard_in_place(self.engine, victim,
+                                             self.clock, self.cost)
+            rep.state_transfer_s = tr.seconds
+            rep.state_bytes = tr.nbytes
+            rep.state_path = tr.path
+
+        steps = [Step("prepare:all", "prepare", plan,
+                      MigState.DELTA_PREPARED),
+                 Step("barrier", "barrier", barrier, MigState.SWITCHING),
+                 Step("resplit", "xfer", resplit)]
+        steps += [Step(f"switch:{g.gid}", "switch",
+                       self._switch_step(run, rep, g))
+                  for g in affected]
+        steps.append(Step("commit", "commit", lambda: None,
+                          MigState.COMMITTED))
+        run.set_steps(steps)
+        self._drive_run(run, rep, {}, affected, set(),
+                        lanes0["downtime"])
         return rep

@@ -805,6 +805,22 @@ class PipelineEngine:
         m.payload["opt"] = jax.tree.map(jnp.asarray, tree["opt"])
         m.payload["step"] = step
 
+    def reshard_machine(self, mid: int) -> int:
+        """Re-bucket a machine's state for an intra-machine re-shard:
+        after a partial-GPU fault the survivors own bigger slices of
+        the stage shard, so the flat param/optimizer buffers re-pack
+        for the new device layout. The bytes are bitwise identical —
+        only the layout moves — which is what keeps re-shard recovery
+        loss-parity-exact by construction. Returns the bytes re-laid.
+
+        The tape needs no re-record: shadow replay is keyed by role
+        type, and the stage's role (and its recorded collectives) are
+        unchanged by an intra-machine re-split."""
+        _, s = self.coords_of(mid)
+        buf, step = self.get_state_flat(mid)
+        self.set_state_flat(mid, s, buf, step)
+        return buf.nbytes
+
     def epoch_signature(self) -> Dict[int, int]:
         """Per-machine committed step counter across the training grid.
         A consistent epoch — the invariant migration rollback must

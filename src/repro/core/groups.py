@@ -93,13 +93,17 @@ class CommGroup:
 
 @dataclass
 class DeltaPlan:
-    """Minimal channel-level reconfiguration for a membership change."""
+    """Minimal channel-level reconfiguration for a membership change
+    (kind="replace") or an intra-machine re-shard (kind="reshard":
+    membership unchanged, the victim's channel endpoints re-bind to its
+    surviving devices, so add == drop == the victim-adjacent edges)."""
     group: str
     replace: Dict[int, int]            # leaver -> joiner
     add: List[Connection] = field(default_factory=list)
     drop: List[Connection] = field(default_factory=list)
     inherited: int = 0                 # untouched connections
     new_members: List[int] = field(default_factory=list)
+    kind: str = "replace"              # replace | reshard
 
     @property
     def delta_fraction(self) -> float:
@@ -126,6 +130,22 @@ def compute_delta_plan(group: CommGroup,
     inherited = len(new_conns) - len(add)
     return DeltaPlan(group.gid, dict(replace), add, drop, inherited,
                      new_members)
+
+
+def compute_reshard_plan(group: CommGroup, mid: int) -> DeltaPlan:
+    """Intra-machine re-shard delta: `mid` lost some (not all) of its
+    devices and re-splits its shard across the survivors. Membership
+    and ring order are untouched; only the connections adjacent to the
+    victim are dropped and re-established, because their QPs bind to
+    device buffers whose layout just changed. |add| == |drop| ==
+    2 * channels for any group size (the victim has one in- and one
+    out-edge per channel ring)."""
+    assert mid in group.members, (group.gid, mid)
+    adj = [c for c in group.connections.values()
+           if mid in (c.src, c.dst)]
+    return DeltaPlan(group.gid, {}, add=list(adj), drop=list(adj),
+                     inherited=len(group.connections) - len(adj),
+                     new_members=list(group.members), kind="reshard")
 
 
 def apply_delta(group: CommGroup, plan: DeltaPlan) -> None:

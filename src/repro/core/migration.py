@@ -25,7 +25,10 @@ Fault injection is first-class: a `FaultPoint` armed on the run raises
 `MidSwitchFault` immediately before the matching step executes, which
 is how the campaign models faults at `during_prepare`,
 `during_warmup`, `mid_switchover` and `concurrent_second_failure`
-timings.
+timings. A FaultPoint carries an arbitrary victim *set*: K concurrent
+failures landing anywhere in one switching window — stayers, DP peers,
+a standby, the leaver itself, or the joiner — are absorbed by a single
+rollback-replan-resume cycle (`Controller._recover_mid_switch`).
 """
 from __future__ import annotations
 
@@ -102,6 +105,14 @@ class MigrationRun:
         # — exactly what rollback needs to revert them
         self.switched: List[Tuple[Any, Any]] = []
         self.resumes = 0
+        # journal invariants the fuzz harness asserts: a step body may
+        # run more than once ONLY if a recovery explicitly invalidated
+        # it (or rollback dropped its switch)
+        self.exec_counts: Dict[str, int] = {}
+        self.invalidated_log: Set[str] = set()
+        # victims recovered via the checkpoint-restart baseline because
+        # the standby pool was exhausted mid-cycle
+        self.ckpt_fallbacks = 0
 
     # --------------------------------------------------------- plumbing
     def _log(self, step: str, **info) -> None:
@@ -121,6 +132,7 @@ class MigrationRun:
     def invalidate(self, *names: str) -> None:
         """Drop journal steps the new failure set made stale; they
         re-execute on the next pass."""
+        self.invalidated_log |= self.done & set(names)
         self.done -= set(names)
 
     # -------------------------------------------------------- execution
@@ -145,6 +157,7 @@ class MigrationRun:
                     self.state = st.state_after
                 continue
             st.fn()
+            self.exec_counts[st.name] = self.exec_counts.get(st.name, 0) + 1
             self.done.add(st.name)
             if st.state_after is not None:
                 self.state = st.state_after
@@ -172,6 +185,8 @@ class MigrationRun:
         n = 0
         for group, plan in reversed(self.switched):
             revert_fn(group, plan)
+            if f"switch:{group.gid}" in self.done:
+                self.invalidated_log.add(f"switch:{group.gid}")
             self.done.discard(f"switch:{group.gid}")
             self._log(f"revert:{group.gid}", members=list(group.members))
             n += 1

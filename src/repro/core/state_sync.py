@@ -84,26 +84,81 @@ def leaver_to_joiner(engine, leaver: int, joiner: int, clock: SimClock,
                           packing)
 
 
+def reshard_in_place(engine, mid: int, clock: SimClock,
+                     cost: CostModel = DEFAULT,
+                     lane: str = "downtime") -> TransferReport:
+    """GPU-granular recovery (§9 / ElasWave-style): `mid` lost some of
+    its devices and re-splits its shard across the survivors instead
+    of migrating away. The slices that lived on the dead devices are
+    lost with their HBM and re-fetch from the machine's DP replica
+    (identical stage state, RDMA path); the surviving slices re-layout
+    over NVLink. The engine then re-packs the flat buckets for the new
+    device layout — bitwise the same bytes, so loss parity holds by
+    construction. The gradient bucket re-allocates sized for the
+    survivor layout (swap-in-place, net zero on the ledger)."""
+    m: Machine = engine.cluster[mid]
+    assert 0 < m.failed_gpus < m.gpus, \
+        f"reshard needs a partial-GPU fault (failed={m.failed_gpus})"
+    nbytes = engine.reshard_machine(mid)
+    lost = int(nbytes * m.failed_gpus / m.gpus)
+    t = cost.transfer(lost, cost.bw_state_transfer, cost.rtt_tcp) \
+        + cost.transfer(nbytes - lost, cost.bw_intra_node)
+    clock.advance(t, f"reshard:{mid}", lane=lane)
+    gbuf = m.device.tagged("grad_buffer")
+    m.device.free("grad_buffer", clock.now)
+    m.device.alloc(gbuf, "grad_buffer", clock.now)
+    packing = ("flat-memcpy" if getattr(engine, "use_flat_buffers", False)
+               else "per-leaf-pack")
+    return TransferReport(lost, t, "dp_peer", 0.0, packing)
+
+
+def live_dp_peer(engine, mid: int) -> Optional[int]:
+    """A live data-parallel replica of `mid`'s stage, if one survives.
+    DP replicas hold bitwise-identical stage state after every update,
+    so a victim whose in-memory checkpoint died with an adjacent victim
+    can still recover exactly — the redundancy is inherent to data
+    parallelism, not a checkpoint artifact."""
+    d, s = engine.coords_of(mid)
+    for d2 in range(engine.dp):
+        if d2 == d:
+            continue
+        peer = engine.grid[(d2, s)]
+        pm = engine.cluster[peer]
+        if pm.alive and "step" in pm.payload:
+            return peer
+    return None
+
+
 def recover_state(engine, failed: int, joiner: int,
                   imc: Optional[InMemoryCheckpoint], clock: SimClock,
                   cost: CostModel = DEFAULT, storage_bw: float = 0.0,
                   storage_state=None,
                   lane: str = "downtime") -> Tuple[TransferReport, int]:
     """Unexpected-failure path: neighbour in-memory checkpoint if the
-    redundancy exists, else remote storage (distributed-optimizer case).
-    Returns (report, checkpoint_step)."""
+    redundancy exists, else a live DP replica of the same stage
+    (bitwise-identical state — covers victim sets whose members held
+    each other's checkpoint replicas), else remote storage
+    (distributed-optimizer case). Returns (report, checkpoint_step)."""
     cl: Cluster = engine.cluster
     jm = cl[joiner]
     hit = imc.get(failed) if imc is not None else None
+    peer = live_dp_peer(engine, failed) if hit is None else None
     if hit is not None:
         step, state = hit
         nbytes = tree_bytes(state)
         # neighbour CPU memory -> joiner GPU over RDMA
         t = cost.transfer(nbytes, cost.bw_state_transfer, cost.rtt_tcp)
         path = "neighbor"
+    elif peer is not None:
+        step = int(cl[peer].payload["step"])
+        state = engine.get_state(peer)
+        nbytes = tree_bytes(state)
+        # replica GPU -> joiner GPU over RDMA
+        t = cost.transfer(nbytes, cost.bw_state_transfer, cost.rtt_tcp)
+        path = "dp_peer"
     else:
         assert storage_state is not None, \
-            "no redundancy and no storage checkpoint"
+            "no redundancy, no live DP replica, no storage checkpoint"
         step, state = storage_state
         nbytes = tree_bytes(state)
         bw = (storage_bw or cost.bw_storage_per_gpu) * jm.gpus

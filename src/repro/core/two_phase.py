@@ -152,6 +152,36 @@ def ccl_switchover(group: CommGroup, cluster: Cluster, clock: SimClock,
     return rep
 
 
+def ccl_reshard_switchover(group: CommGroup, cluster: Cluster,
+                           clock: SimClock, cost: CostModel = DEFAULT,
+                           lane: str = "downtime") -> PhaseReport:
+    """Phase 2 of an intra-machine re-shard: the victim's QPs re-bind
+    to the survivor device layout. Unlike a membership switchover no
+    topology changes — the same (src, dst, channel) edges are dropped
+    and re-established — but the verbs work is real: the victim and
+    each ring neighbour re-create their side of every victim-adjacent
+    QP, machines in parallel. apply_delta then flips the (identical)
+    connection set back in and clears the pending plan."""
+    assert group.state in (GroupState.READY_TO_SWITCHOUT,
+                           GroupState.PREPARING), group.state
+    plan = group.pending_plan
+    assert plan is not None and plan.kind == "reshard", plan
+    rep = PhaseReport(group.gid)
+    with clock.parallel(f"reshard2:{group.gid}", lane=lane) as p:
+        per_machine: Dict[int, int] = {}
+        for c in plan.add:
+            per_machine[c.src] = per_machine.get(c.src, 0) + 1
+            per_machine[c.dst] = per_machine.get(c.dst, 0) + 1
+        for mid, n in per_machine.items():
+            p.track(mid, cost.qp_setup * n)
+    apply_delta(group, plan)
+    rep.phase2_time = clock.phases[-1].duration
+    rep.qps_added = len(plan.add)
+    rep.qps_dropped = len(plan.drop)
+    rep.qps_inherited = plan.inherited
+    return rep
+
+
 def ccl_revert_switchover(group: CommGroup, plan: DeltaPlan,
                           cluster: Cluster, clock: SimClock,
                           cost: CostModel = DEFAULT,

@@ -9,8 +9,12 @@ so runs are reproducible.  When the real hypothesis is importable,
 conftest prefers it and this module is never registered.
 
 Semantics: ``@given`` runs ``max_examples`` drawn examples per test
-(boundary-biased draws for integers/floats); a failing example re-raises
-with the drawn values attached to the assertion message.
+(boundary-biased draws for integers/floats); a failing example is
+first *shrunk* — each strategy proposes simpler candidate values
+(integers toward zero/their lower bound, strings and collections by
+dropping elements, tuples elementwise) and the smallest combination
+that still fails is reported — then re-raised with both the minimal
+and the originally-drawn values attached to the assertion message.
 """
 from __future__ import annotations
 
@@ -26,12 +30,22 @@ _BOUNDARY_P = 0.15        # probability of drawing a range endpoint
 
 class SearchStrategy:
     def __init__(self, draw_fn: Callable[[random.Random], Any],
-                 label: str = "strategy"):
+                 label: str = "strategy",
+                 shrink_fn: Callable[[Any], Any] = None):
         self._draw_fn = draw_fn
+        self._shrink_fn = shrink_fn
         self.label = label
 
     def draw(self, rng: random.Random) -> Any:
         return self._draw_fn(rng)
+
+    def shrink(self, value: Any):
+        """Candidate simplifications of `value`, simplest first. Every
+        candidate must itself be a value the strategy could have drawn
+        (shrinking stays inside the strategy's invariants)."""
+        if self._shrink_fn is None:
+            return ()
+        return self._shrink_fn(value)
 
     def __repr__(self) -> str:
         return f"<stub {self.label}>"
@@ -42,7 +56,24 @@ def integers(min_value: int, max_value: int) -> SearchStrategy:
         if rng.random() < _BOUNDARY_P:
             return rng.choice((min_value, max_value))
         return rng.randint(min_value, max_value)
-    return SearchStrategy(draw, f"integers({min_value},{max_value})")
+
+    # shrink toward zero when the range allows it, else toward the
+    # lower bound (real-hypothesis convention)
+    target = 0 if min_value <= 0 <= max_value else min_value
+
+    def shrink(v):
+        out = []
+        if v != target:
+            out.append(target)
+            mid = (v + target) // 2
+            if mid not in (v, target):
+                out.append(mid)
+            step = v - 1 if v > target else v + 1
+            if step not in out:
+                out.append(step)
+        return out
+    return SearchStrategy(draw, f"integers({min_value},{max_value})",
+                          shrink)
 
 
 def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
@@ -50,7 +81,19 @@ def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
         if rng.random() < _BOUNDARY_P:
             return rng.choice((float(min_value), float(max_value)))
         return rng.uniform(float(min_value), float(max_value))
-    return SearchStrategy(draw, f"floats({min_value},{max_value})")
+
+    target = 0.0 if min_value <= 0.0 <= max_value else float(min_value)
+
+    def shrink(v):
+        out = []
+        if v != target:
+            out.append(target)
+            mid = (v + target) / 2.0
+            if mid not in (v, target):
+                out.append(mid)
+        return out
+    return SearchStrategy(draw, f"floats({min_value},{max_value})",
+                          shrink)
 
 
 def booleans() -> SearchStrategy:
@@ -63,6 +106,25 @@ def sampled_from(elements: Sequence) -> SearchStrategy:
                           f"sampled_from({elements!r})")
 
 
+def _seq_shrinks(v: Sequence, min_size: int, rebuild: Callable):
+    """Size-reduction candidates for a sequence value: empty (when
+    allowed), first half, drop-first, drop-last — never below
+    min_size, so candidates stay inside the strategy's invariants."""
+    out = []
+    n = len(v)
+    if n <= min_size:
+        return out
+    if min_size == 0:
+        out.append(rebuild(v[:0]))
+    half = n // 2
+    if min_size <= half < n and half > 0:
+        out.append(rebuild(v[:half]))
+    if n - 1 >= min_size and n > 1:
+        out.append(rebuild(v[1:]))
+        out.append(rebuild(v[:-1]))
+    return out
+
+
 def lists(elements: SearchStrategy, *, min_size: int = 0,
           max_size: int = 10, **_kw) -> SearchStrategy:
     def draw(rng):
@@ -71,13 +133,59 @@ def lists(elements: SearchStrategy, *, min_size: int = 0,
         else:
             n = rng.randint(min_size, max_size)
         return [elements.draw(rng) for _ in range(n)]
-    return SearchStrategy(draw, f"lists({elements.label})")
+
+    def shrink(v):
+        out = _seq_shrinks(v, min_size, list)
+        # elementwise: shrink one element at a time via the element
+        # strategy (first candidate only, to bound the search)
+        for i, x in enumerate(v):
+            for cand in elements.shrink(x):
+                out.append(v[:i] + [cand] + v[i + 1:])
+                break
+        return out
+    return SearchStrategy(draw, f"lists({elements.label})", shrink)
+
+
+def text(alphabet: Sequence = None, *, min_size: int = 0,
+         max_size: int = 10, **_kw) -> SearchStrategy:
+    """String strategy (real-hypothesis surface, ASCII-only here):
+    draws min_size..max_size characters from `alphabet` (default:
+    printable letters/digits/punctuation). Shrinks by dropping
+    characters and by replacing them with the smallest alphabet
+    character, so minimal counterexamples read like 'aaa'."""
+    chars = (list(alphabet) if alphabet is not None else
+             list("abcdefghijklmnopqrstuvwxyz"
+                  "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789 _-."))
+    assert chars, "text() needs a non-empty alphabet"
+    lo = min(chars)
+
+    def draw(rng):
+        if rng.random() < _BOUNDARY_P:
+            n = rng.choice((min_size, max_size))
+        else:
+            n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(chars) for _ in range(n))
+
+    def shrink(v):
+        out = _seq_shrinks(v, min_size, "".join)
+        for i, c in enumerate(v):
+            if c != lo:
+                out.append(v[:i] + lo + v[i + 1:])
+                break
+        return out
+    return SearchStrategy(draw, f"text({len(chars)} chars)", shrink)
 
 
 def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    def shrink(v):
+        out = []
+        for i, s in enumerate(strategies):
+            for cand in s.shrink(v[i]):
+                out.append(v[:i] + (cand,) + v[i + 1:])
+        return out
     return SearchStrategy(
         lambda rng: tuple(s.draw(rng) for s in strategies),
-        f"tuples({', '.join(s.label for s in strategies)})")
+        f"tuples({', '.join(s.label for s in strategies)})", shrink)
 
 
 def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
@@ -156,21 +264,55 @@ def given(*strategies: SearchStrategy) -> Callable:
             f"{fn.__name__}: more strategies than parameters"
         drawn_names = [p.name for p in params[len(params) - n_drawn:]]
 
+        def run_one(fixture_args, fixture_kwargs, values):
+            """Returns the exception a value tuple provokes (None if it
+            passes or merely fails an assume())."""
+            try:
+                fn(*fixture_args, **fixture_kwargs,
+                   **dict(zip(drawn_names, values)))
+            except _AssumptionFailed:
+                return None
+            except Exception as e:
+                return e
+            return None
+
+        def shrink_failure(fixture_args, fixture_kwargs, drawn, exc):
+            """Greedy minimal-example search: per drawn value, try the
+            strategy's shrink candidates and keep any substitution that
+            still fails; repeat until a whole pass improves nothing (or
+            the attempt budget runs out)."""
+            cur, budget, improved = drawn, 200, True
+            while improved and budget > 0:
+                improved = False
+                for j, strat in enumerate(strategies):
+                    for cand in strat.shrink(cur[j]):
+                        budget -= 1
+                        trial = cur[:j] + (cand,) + cur[j + 1:]
+                        e = run_one(fixture_args, fixture_kwargs, trial)
+                        if e is not None:
+                            cur, exc, improved = trial, e, True
+                            break
+                        if budget <= 0:
+                            break
+                    if budget <= 0:
+                        break
+            return cur, exc
+
         def wrapper(*fixture_args, **fixture_kwargs):
             conf = getattr(wrapper, "_stub_settings", None) or \
                 getattr(fn, "_stub_settings", {"max_examples": 20})
             rng = random.Random(_SEED)
             for i in range(conf["max_examples"]):
                 drawn = tuple(s.draw(rng) for s in strategies)
-                try:
-                    fn(*fixture_args, **fixture_kwargs,
-                       **dict(zip(drawn_names, drawn)))
-                except _AssumptionFailed:
-                    continue
-                except Exception as e:
+                exc = run_one(fixture_args, fixture_kwargs, drawn)
+                if exc is not None:
+                    minimal, exc = shrink_failure(
+                        fixture_args, fixture_kwargs, drawn, exc)
+                    suffix = ("" if minimal == drawn
+                              else f" (shrunk from {drawn!r})")
                     raise AssertionError(
                         f"falsifying example #{i} of {fn.__name__}: "
-                        f"args={drawn!r}") from e
+                        f"args={minimal!r}{suffix}") from exc
         # expose only the fixture parameters to pytest (no __wrapped__,
         # so the drawn parameters are never mistaken for fixtures)
         wrapper.__signature__ = inspect.Signature(
@@ -191,7 +333,7 @@ def install() -> None:
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
                  "permutations", "just", "composite", "lists", "tuples",
-                 "dictionaries"):
+                 "dictionaries", "text"):
         setattr(strat, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

@@ -20,8 +20,9 @@ KINDS = {"expected", "failure", "gpu_degrade", "straggler", "rebalance",
 TIMINGS = {"between_iter", "pre_reduce", "post_reduce",
            "during_migration", "during_prepare", "during_warmup",
            "mid_switchover", "concurrent_second_failure", "cascade"}
-RECOVERIES = {"migration", "standby", "ckpt_restart", "full_reinit",
-              "replace"}
+RECOVERIES = {"migration", "standby", "reshard", "ckpt_restart",
+              "full_reinit", "replace"}
+VICTIM_TOKENS = {"joiner", "leaver", "standby"}
 
 
 # ------------------------------------------------- fast: matrix shape
@@ -31,7 +32,7 @@ def test_default_matrix_well_formed(dp, pp):
     m = campaign.default_matrix(dp, pp)
     names = [s.name for s in m]
     assert len(names) == len(set(names)), "scenario names must be unique"
-    assert len(m) >= 20
+    assert len(m) >= 33
     for s in m:
         assert s.kind in KINDS and s.timing in TIMINGS \
             and s.recovery in RECOVERIES, s
@@ -42,22 +43,58 @@ def test_default_matrix_well_formed(dp, pp):
             if role.startswith("d") and "s" in role:
                 d, stage = role[1:].split("s")
                 assert int(d) < dp and int(stage) < pp, (s.name, role)
-    # breadth: every kind, timing and recovery path is exercised
+        # victim sets: tokens are resolvable, entries unique, a token
+        # only makes sense when an in-flight migration exists, and the
+        # standby pool is provisioned for the victims that need one
+        victims = list(s.params.get("victims", []))
+        assert len(victims) == len(set(victims)), (s.name, victims)
+        assert len(victims) <= 5, s.name
+        for v in victims:
+            if not (v.startswith("d") and "s" in v):
+                assert v in VICTIM_TOKENS, (s.name, v)
+                if v in ("joiner", "leaver"):
+                    assert "migrate" in s.params, (s.name, v)
+    # breadth: every kind, timing and recovery path is exercised, and
+    # the victim-set axis reaches K in {2, 3, 5}
     assert {s.kind for s in m} == KINDS
     assert {s.timing for s in m} == TIMINGS
     assert {s.recovery for s in m} == RECOVERIES
+    ks = {len(s.params["victims"]) for s in m if "victims" in s.params}
+    assert {2, 3, 5} <= ks, ks
 
 
 def test_reduced_matrix_is_subset():
     full = {s.name for s in campaign.default_matrix(2, 2)}
     reduced = campaign.reduced_matrix(2, 2)
     assert {s.name for s in reduced} <= full
-    assert {s.recovery for s in reduced} >= {"standby", "full_reinit"}
+    assert {s.recovery for s in reduced} >= {"standby", "full_reinit",
+                                             "reshard"}
     # the push-CI slice exercises the mid-switch state machine and the
     # GPU-granular fault kind
     assert {s.timing for s in reduced} >= {"during_warmup",
                                            "mid_switchover"}
     assert "gpu_degrade" in {s.kind for s in reduced}
+
+
+def test_reduced_covers_every_kind_and_timing():
+    """Drift guard: REDUCED_NAMES is a hand-maintained tuple, so a
+    rename in default_matrix (or a new axis value) could silently
+    shrink the push-CI slice. Every reduced name must still exist in
+    the full matrix — reduced_matrix drops unknown names without
+    complaint — and the reduced slice must cover every kind and timing
+    axis value the full matrix exercises."""
+    full = {s.name: s for s in campaign.default_matrix(2, 2)}
+    missing = [n for n in campaign.REDUCED_NAMES if n not in full]
+    assert not missing, \
+        f"REDUCED_NAMES drifted from default_matrix: {missing}"
+    assert len(set(campaign.REDUCED_NAMES)) == len(campaign.REDUCED_NAMES)
+    reduced = campaign.reduced_matrix(2, 2)
+    assert len(reduced) == len(campaign.REDUCED_NAMES)
+    for axis in ("kind", "timing"):
+        full_vals = {getattr(s, axis) for s in full.values()}
+        red_vals = {getattr(s, axis) for s in reduced}
+        assert red_vals == full_vals, \
+            f"reduced slice misses {axis} values: {full_vals - red_vals}"
 
 
 @given(st.dictionaries(st.sampled_from(["dp", "pp"]),
@@ -141,6 +178,28 @@ def test_mid_switch_faults_resume_within_downtime_envelope(
     assert by["gpu-degrade-first"].loss_parity
     assert summary["mid_switch_max_over_median"] <= 1.5, summary
     assert summary["mid_switch_claim_ok"], summary
+
+
+@pytest.mark.slow
+def test_victim_set_and_reshard_within_envelope(reduced_results):
+    """The generalized-recovery slice of the reduced matrix: the K=3
+    victim set (incl. the in-flight joiner) resumes off one abort with
+    parity, the intra-machine re-shard keeps parity without migrating,
+    and both stay inside the standby downtime envelope."""
+    by = {x.name: x for x in reduced_results}
+    k3 = by["fail-k3-joiner"]
+    assert k3.events == 4 and k3.resumes == 1
+    assert k3.loss_parity and k3.ckpt_fallbacks == 0
+    rs = by["gpu-reshard-first"]
+    assert rs.loss_parity and rs.resumes == 0
+    assert rs.recovery_path == "dp_peer"
+    assert rs.lost_iterations == 0
+    summary = campaign.summarize(reduced_results)
+    assert summary["mid_switch_claim_ok"], summary
+    assert summary["n_victim_set_scenarios"] >= 2, summary
+    # at tiny-GPT scale re-shard and migrate downtime are comparable;
+    # the envelope (not superiority) is the claim under test
+    assert 0.0 < summary["reshard_vs_migrate"] <= 1.5, summary
 
 
 @pytest.mark.slow

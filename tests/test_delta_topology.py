@@ -1,8 +1,12 @@
-"""Property tests for the two-phase delta-topology algorithm (§5.2)."""
+"""Property tests for the two-phase delta-topology algorithm (§5.2)
+and the apply/revert splice round-trip (crash-consistent rollback),
+including the intra-machine re-shard delta kind."""
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core.groups import (CommGroup, apply_delta, compute_delta_plan)
+from repro.core.groups import (CommGroup, GroupState, apply_delta,
+                               compute_delta_plan, compute_reshard_plan,
+                               revert_delta)
 
 
 @st.composite
@@ -67,3 +71,57 @@ def test_idempotent_identity_replacement(case):
     plan = compute_delta_plan(g, {})
     assert not plan.add and not plan.drop
     assert plan.inherited == len(g.connections)
+
+
+# ------------------------------------------- apply/revert round-trips
+_GID = st.text(alphabet="abcdefgh0123456789.", min_size=1, max_size=12)
+
+
+def _snapshot(g: CommGroup):
+    return (list(g.members), dict(g.connections))
+
+
+@given(_GID, group_and_replace(), st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_apply_revert_round_trip_identity(gid, case, reshard):
+    """apply_delta then revert_delta is the identity on (members,
+    connections) for BOTH delta kinds — the invariant crash-consistent
+    rollback rests on — with rings validated after every splice and
+    the plan re-staged pending so the re-switch needs no phase 1."""
+    members, channels, replace = case
+    g = CommGroup(gid, "dp", list(members), channels)
+    g.establish_all()
+    before = _snapshot(g)
+
+    if reshard:
+        victim = members[len(members) // 2]
+        plan = compute_reshard_plan(g, victim)
+        assert plan.kind == "reshard"
+        assert not plan.replace and plan.new_members == members
+        # the victim-adjacent splice is bounded and membership-free:
+        # one in- and one out-edge per channel ring
+        assert len(plan.add) == len(plan.drop)
+        assert len(plan.add) == (2 * channels if len(members) > 2
+                                 else min(2, len(members)) * channels)
+    else:
+        plan = compute_delta_plan(g, replace)
+        assert plan.kind == "replace"
+
+    apply_delta(g, plan)
+    assert g.validate_rings(), "rings broken after apply"
+    if reshard:
+        # re-shard never changes membership or the connection key set
+        assert _snapshot(g) == before
+    apply_snapshot = _snapshot(g)
+
+    revert_delta(g, plan)
+    assert g.validate_rings(), "rings broken after revert"
+    assert _snapshot(g) == before, "revert is not the exact inverse"
+    assert g.state == GroupState.READY_TO_SWITCHOUT
+    assert g.pending_plan is plan
+
+    # the re-staged plan re-applies to the same post-switch epoch
+    apply_delta(g, plan)
+    assert g.validate_rings()
+    assert _snapshot(g) == apply_snapshot
+    assert g.pending_plan is None and g.pending_members is None

@@ -80,6 +80,32 @@ def test_invalidate_reruns_exactly_the_dropped_steps():
     assert calls == ["p", "s", "p"]
 
 
+def test_exec_counts_track_replays_and_invalidations():
+    """The fuzz harness's journal invariant: a step body runs more than
+    once ONLY if it was explicitly invalidated (rollback-discarded
+    switches count as invalidated too)."""
+    steps = [Step("p", "prepare", lambda: None),
+             Step("s", "switch", lambda: None)]
+    run = _run_with(steps).execute()
+    assert run.exec_counts == {"p": 1, "s": 1}
+    assert run.invalidated_log == set()
+    run.invalidate("p", "never_ran")
+    assert run.invalidated_log == {"p"}      # only steps that were done
+    run.execute()
+    assert run.exec_counts == {"p": 2, "s": 1}
+    replayed = {n for n, c in run.exec_counts.items() if c > 1}
+    assert replayed <= run.invalidated_log
+
+    class _G:
+        gid = "s"                            # step name "switch:s"
+        members = []
+
+    run2 = _run_with([Step("switch:s", "switch", lambda: None)]).execute()
+    run2.record_switch(_G(), "plan")
+    run2.rollback(lambda g, p: None, force=True)   # complete switchover
+    assert run2.invalidated_log == {"switch:s"}
+
+
 def _group(n=6, channels=2):
     g = CommGroup("dp.s0", "dp", list(range(n)), channels)
     g.establish_all()
@@ -251,6 +277,234 @@ def test_elastic_recovery_mid_prepare_never_reuses_pending_joiner(
     assert len(mids) == len(set(mids)), \
         f"one machine assigned to two grid slots: {mids}"
     assert rep.pairs[leaver] in mids
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_k3_victim_set_joiner_standby_stayer(reference):
+    """K=3 concurrent failures mid-switchover hitting three different
+    role classes at once — the in-flight migration's joiner, a standby
+    and a stayer — absorbed by ONE rollback-replan-resume cycle: the
+    joiner is replaced and state re-shipped, the dead standby is
+    replenished off the critical path, the stayer promotes the
+    surviving standby, and the retry is bitwise transparent."""
+    ctl = campaign.build_controller(CFG, standby_count=2)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    joiner = ctl._alloc_joiners(1)[0]
+    doomed_standby = ctl.standbys[-1]
+    stayer = ctl.engine.grid[(1, 0)]
+    rep = ctl.expected_migration(
+        [leaver], joiners=[joiner],
+        inject=FaultPoint("switch", 1, [joiner, doomed_standby, stayer]))
+    assert rep.resumes == 1 and rep.ckpt_fallbacks == 0
+    assert rep.journal.count("xfer") == 2         # re-ship to replacement
+    live = set(ctl.engine.grid.values())
+    assert len(live) == len(ctl.engine.grid)
+    for v in (joiner, doomed_standby, stayer):
+        assert v not in live and not ctl.cluster[v].alive
+    assert leaver not in live and ctl.cluster[leaver].alive  # left, not died
+    assert rep.pairs[leaver] in live and rep.pairs[leaver] != joiner
+    # the dead standby was replaced off the critical path
+    assert len(ctl.standbys) == 1
+    assert all(ctl.cluster[s].alive for s in ctl.standbys)
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_leaver_death_pre_xfer_dissolves_the_pair(reference):
+    """The leaver itself dies during warmup, before its state shipped:
+    the pair dissolves (reserved joiner back to the pool), the leaver
+    recovers like any failed training machine, and the voided
+    leaver-keyed steps are skipped on resume."""
+    ctl = campaign.build_controller(CFG, standby_count=2)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    stayer = ctl.engine.grid[(1, 0)]
+    rep = ctl.expected_migration(
+        [leaver], inject=FaultPoint("warmup", 0, [leaver, stayer]))
+    assert rep.resumes == 1
+    assert rep.pairs == {}                       # pair dissolved
+    assert not ctl.cluster[leaver].alive
+    live = set(ctl.engine.grid.values())
+    assert leaver not in live and stayer not in live
+    assert len(live) == len(ctl.engine.grid)
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_leaver_and_joiner_both_die_post_xfer(reference):
+    """State shipped to the joiner, then BOTH ends of the pair die
+    between per-group switchovers: the shipped bytes are gone with the
+    joiner, so the benign-leaver shortcut must not fire — the leaver's
+    slot recovers from checkpoint redundancy instead."""
+    ctl = campaign.build_controller(CFG, standby_count=2)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    joiner = ctl._alloc_joiners(1)[0]
+    rep = ctl.expected_migration(
+        [leaver], joiners=[joiner],
+        inject=FaultPoint("switch", 1, [leaver, joiner]))
+    assert rep.resumes == 1
+    live = set(ctl.engine.grid.values())
+    assert leaver not in live and joiner not in live
+    assert len(live) == len(ctl.engine.grid)
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_joiner_death_on_unexpected_path_repromotes(reference):
+    """The promoted standby itself dies between the per-group
+    switchovers of a failure recovery (the unexpected engine path —
+    previously asserted out as unmodeled): the run force-reverts,
+    re-promotes the next standby, re-restores state and resumes to
+    bitwise parity."""
+    ctl = campaign.build_controller(CFG, standby_count=2)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    failed = ctl.engine.grid[(0, 0)]
+    promoted = ctl.standbys[0]
+    survivor = ctl.standbys[1]
+    rep = ctl.unexpected_failure(
+        failed, inject=FaultPoint("switch", 1, [promoted]))
+    assert rep.resumes == 1
+    assert not ctl.cluster[promoted].alive
+    assert rep.pairs == {failed: survivor}
+    # promote/recover were re-executed after the invalidation
+    assert ctl.last_run.exec_counts["promote"] == 2
+    assert ctl.last_run.exec_counts["recover"] == 2
+    assert survivor in ctl.engine.grid.values()
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_standby_overflow_falls_back_to_ckpt_restart(reference):
+    """Victims outnumber the standby pool with per-iteration
+    checkpointing off: the overflow recovers via the checkpoint-restart
+    baseline — ONE restart window, after which the remaining victims
+    re-sync from the just-restored epoch — counted on the report, and
+    the retry still reconverges bitwise (storage was saved at the
+    injection step)."""
+    ctl = campaign.build_controller(CFG, standby_count=1,
+                                    per_iteration_ckpt=False)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    ctl.save_to_storage()
+    leaver = ctl.engine.grid[(0, 1)]
+    victims = [ctl.engine.grid[(1, 0)], ctl.engine.grid[(0, 0)],
+               ctl.engine.grid[(1, 1)]]
+    rep = ctl.expected_migration(
+        [leaver], inject=FaultPoint("switch", 1, victims))
+    assert rep.resumes == 1
+    assert rep.ckpt_fallbacks == 1               # one restart window
+    live = set(ctl.engine.grid.values())
+    assert not (set(victims) | {leaver}) & live
+    assert len(live) == len(ctl.engine.grid)
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_mid_switch_recovery_via_dp_peer_without_any_checkpoint(
+        reference):
+    """No standby, no per-iteration checkpoints, no storage save: a
+    mid-switch victim with a live DP replica still recovers (elastic
+    promotion + bitwise-identical peer state) instead of tripping the
+    overflow fallback's storage assert."""
+    ctl = campaign.build_controller(CFG, standby_count=0,
+                                    per_iteration_ckpt=False)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    leaver = ctl.engine.grid[(0, 1)]
+    victim = ctl.engine.grid[(1, 0)]        # DP peer d0s0 survives
+    rep = ctl.expected_migration(
+        [leaver], inject=FaultPoint("switch", 1, [victim]))
+    assert rep.resumes == 1 and rep.ckpt_fallbacks == 0
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_reshard_recovery_keeps_machine_and_parity(reference):
+    """Intra-machine re-sharding for a partial-GPU fault: the victim
+    keeps its grid slot, the lost slices re-fetch from the DP replica,
+    the flat buckets re-pack bitwise-identically, and the re-shard
+    delta re-binds exactly the victim-adjacent QPs."""
+    ctl = campaign.build_controller(CFG, standby_count=0)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    victim = ctl.engine.grid[(0, 0)]
+    conns_before = {g.gid: dict(g.connections)
+                    for g in ctl.engine.groups.values()}
+    rep = ctl.gpu_fault(victim, policy="reshard")
+    assert rep.kind == "gpu_reshard" and rep.resumes == 0
+    assert rep.state_path == "dp_peer"
+    m = ctl.cluster[victim]
+    assert m.alive and m.failed_gpus == 1 and m.straggle_factor > 1.0
+    assert victim in ctl.engine.grid.values()    # no migration happened
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+        # membership and connection keys unchanged by the re-bind
+        assert set(g.connections) == set(conns_before[g.gid])
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_reshard_run_survives_its_own_machine_dying(reference):
+    """A fault inside the re-shard run kills the re-sharding machine
+    itself: the recovery swaps a standby into its slot and the resumed
+    run's remaining re-shard steps become no-ops (the replacement
+    holds a whole, healthy shard) — no crash, bitwise parity."""
+    ctl = campaign.build_controller(CFG, standby_count=1)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    victim = ctl.engine.grid[(0, 0)]
+    rep = ctl.gpu_fault(victim, policy="reshard",
+                        inject=FaultPoint("switch", 0, [victim]))
+    assert rep.kind == "gpu_reshard" and rep.resumes == 1
+    assert victim not in ctl.engine.grid.values()
+    assert not ctl.cluster[victim].alive
+    for g in ctl.engine.groups.values():
+        assert g.state == GroupState.ACTIVE and g.validate_rings()
+    campaign._train_to(ctl, 1 + CFG.total_iters, losses)
+    assert all(losses[k] == reference[k] for k in reference)
+
+
+@pytest.mark.slow
+def test_gpu_fault_auto_policy_picks_by_surviving_fraction(reference):
+    """The CostModel knob: a light loss re-shards in place, a heavy
+    loss migrates away after all."""
+    ctl = campaign.build_controller(CFG, standby_count=0)
+    losses = {0: ctl.engine.losses[0]}
+    campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
+    light = ctl.engine.grid[(0, 0)]
+    rep1 = ctl.gpu_fault(light, policy="auto")          # 7/8 survive
+    assert rep1.kind == "gpu_reshard"
+    assert light in ctl.engine.grid.values()
+    heavy = ctl.engine.grid[(1, 1)]
+    step0, nloss0 = ctl.engine.step_count, len(ctl.engine.losses)
+    rep2 = ctl.gpu_fault(heavy, policy="auto", lose=5)  # 3/8 survive
+    # the iteration committed during the migrate-path prep lands in
+    # the loss map too
+    for i, st in enumerate(range(step0, ctl.engine.step_count)):
+        losses[st] = ctl.engine.losses[nloss0 + i]
+    assert rep2.kind == "gpu_degrade"
+    assert heavy not in ctl.engine.grid.values()
     campaign._train_to(ctl, 1 + CFG.total_iters, losses)
     assert all(losses[k] == reference[k] for k in reference)
 
