@@ -12,6 +12,11 @@ Invoked directly, the full matrix runs by default and ``--reduced``
 selects the one-scenario-per-code-path subset (the push-CI profile);
 through ``benchmarks.run`` the reduced subset runs, keeping the sweep
 usable (the full matrix is the nightly campaign CI job).
+``--crash-only`` runs just the controller_crash slice of the full
+matrix (restart + journal replay + worker re-registration + run
+adoption at every journaled step class) without touching the BENCH
+files — the nightly CI step that isolates the control-plane claim
+under its own timeout.
 """
 from __future__ import annotations
 
@@ -28,11 +33,30 @@ from benchmarks.common import emit
 from repro.core import campaign
 
 
-def run(reduced: bool = True) -> None:
+def run(reduced: bool = True, crash_only: bool = False) -> None:
     cfg = campaign.CampaignCfg()
-    matrix = (campaign.reduced_matrix(cfg.dp, cfg.pp) if reduced
-              else campaign.default_matrix(cfg.dp, cfg.pp))
+    if crash_only:
+        matrix = [s for s in campaign.default_matrix(cfg.dp, cfg.pp)
+                  if s.kind == "controller_crash"]
+    elif reduced:
+        matrix = campaign.reduced_matrix(cfg.dp, cfg.pp)
+    else:
+        matrix = campaign.default_matrix(cfg.dp, cfg.pp)
     payload = campaign.run_campaign(matrix, cfg)
+    if crash_only:
+        # the crash slice checks the control-plane claim but is not a
+        # full campaign: don't clobber the BENCH files with it
+        s = payload["summary"]
+        for r in payload["scenarios"]:
+            assert r["loss_parity"], (r["name"], r["loss_max_delta"])
+            assert r["lost_iterations"] == 0, r["name"]
+        print(f"crash-slice,{s['controller_crash_downtime_max_s'] * 1e6:.1f},"
+              f"scenarios={s['n_scenarios']}"
+              f";parity={s['all_loss_parity']}")
+        print(f"controller-crash slice OK "
+              f"({s['n_scenarios']} restarts, max downtime "
+              f"{s['controller_crash_downtime_max_s']:.3f}s/event)")
+        return
     json_path = os.path.join(_ROOT, "BENCH_downtime.json")
     md_path = os.path.join(_ROOT, "BENCH_downtime.md")
     campaign.write_outputs(payload, json_path, md_path)
@@ -50,9 +74,14 @@ def run(reduced: bool = True) -> None:
           f";victim_sets={s['n_victim_set_scenarios']}"
           f"(K<={s['max_victim_set_k']})"
           f";reshard_vs_migrate={s['reshard_vs_migrate']:.2f}"
+          f";crash_over={s['controller_crash_max_over_median']:.2f}"
           f";overflow={len(s['overflow_fallback_scenarios'])}"
           f";parity={s['all_loss_parity']}")
     assert s["all_loss_parity"], "a scenario diverged from the reference"
+    # the control-plane claim: restart + replay + re-registration + run
+    # adoption stays inside the same per-event envelope as data-plane
+    # standby recovery
+    assert s["controller_crash_claim_ok"], s
     # flat_claim_ok covers the standby envelope, the full-reinit gap
     # AND the 1.5x envelope over mid-switch / GPU-granular / K-victim-
     # set / re-shard scenarios (summary["mid_switch_claim_ok"] breaks
@@ -63,6 +92,7 @@ def run(reduced: bool = True) -> None:
         assert s["n_scenarios"] >= 33, s["n_scenarios"]
         assert s["n_victim_set_scenarios"] >= 8, s
         assert s["max_victim_set_k"] >= 5, s
+        assert s["controller_crash_downtime_max_s"] > 0.0, s
     print(f"BENCH_downtime.json written -> {json_path}")
 
 
@@ -70,4 +100,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
                     help="run the reduced (push-CI) scenario subset")
-    run(ap.parse_args().reduced)
+    ap.add_argument("--crash-only", action="store_true",
+                    help="run only the controller_crash slice of the "
+                         "full matrix (no BENCH files written)")
+    ns = ap.parse_args()
+    run(ns.reduced, ns.crash_only)

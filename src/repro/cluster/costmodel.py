@@ -64,6 +64,18 @@ class CostModel:
     # it to compare the two recoveries' downtime.
     reshard_min_fraction: float = 0.5
 
+    # ---- control-plane durability (self-healing controller)
+    # The controller's durable state is a small append-only journal on
+    # replicated storage (etcd/raft-class log, FFTrainer-style "almost
+    # free" failover records). Appends are group-committed off the
+    # critical path; the restart pays a supervisor respawn plus one
+    # sequential replay of the compacted log, and each worker
+    # re-registers with one small RPC.
+    bw_journal: float = 200 * 2 ** 20       # local NVMe-backed log append
+    journal_append_latency: float = 2e-4    # fsync'd group commit
+    controller_restart_s: float = 0.5       # supervisor respawn + log open
+    worker_reregister_s: float = 1e-3       # per-worker re-register RPC
+
     # ---- gradient coalescing (NCCL/DDP-style flat buckets)
     # A contiguous buffer is chunked into pipelined buckets: one full
     # RTT per collective launch, plus a small per-extra-bucket launch

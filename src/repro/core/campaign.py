@@ -2,7 +2,8 @@
 
 Drives `Controller` through a declarative scenario matrix —
 interruption kind (expected leave, unexpected failure, GPU-granular
-degradation, straggler, rebalance, standby loss) x role
+degradation, straggler, rebalance, standby loss, controller crash) x
+role
 (first/middle/last stage, every DP rank, the standby itself, and in
 victim *sets* the joiner or the leaver of an in-flight migration) x
 timing (between iterations, mid-iteration before/after the bucket
@@ -42,18 +43,21 @@ from repro.cluster.simclock import SimClock
 from repro.configs.gpt import tiny_gpt
 from repro.core.controller import Controller
 from repro.core.engine import PipelineEngine
-from repro.core.migration import FaultPoint
+from repro.core.migration import ControllerCrash, CrashPoint, FaultPoint
 from repro.core.sandbox import CommHooks
 
 LANES = ("downtime", "overlap", "train")
 
 # timing axis values that land *inside* the migration state machine;
-# each maps to the (step kind, occurrence) the FaultPoint fires at
+# each maps to the (step kind, occurrence) the FaultPoint (or, for
+# controller_crash scenarios, the CrashPoint) fires at
 MID_SWITCH_TIMINGS = {
     "during_prepare": ("prepare", 1),
     "during_warmup": ("warmup", 0),
     "mid_switchover": ("switch", 1),
     "concurrent_second_failure": ("switch", 1),
+    # failure-recovery runs only: crash before the state-recovery step
+    "mid_recovery": ("recover", 0),
 }
 
 
@@ -69,13 +73,14 @@ class Scenario:
     migration at injection time."""
     name: str
     kind: str        # expected | failure | gpu_degrade | straggler |
-    #                # rebalance | standby_loss
+    #                # rebalance | standby_loss | controller_crash
     role: str
     timing: str      # between_iter | pre_reduce | post_reduce |
     #                # during_migration | during_prepare | during_warmup |
-    #                # mid_switchover | concurrent_second_failure | cascade
+    #                # mid_switchover | mid_recovery |
+    #                # concurrent_second_failure | cascade
     recovery: str    # migration | standby | reshard | ckpt_restart |
-    #                # full_reinit | replace
+    #                # full_reinit | replace | replay
     params: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -288,6 +293,36 @@ def default_matrix(dp: int = 2, pp: int = 2) -> List[Scenario]:
     scs.append(Scenario("gpu-auto-migrate-heavy", "gpu_degrade", "d0s0",
                         "between_iter", "migration",
                         {"policy": "auto", "lose_gpus": 5}))
+    # a machine failure landing inside a re-shard run's OWN switch
+    # steps: the re-shard aborts, rolls its flipped groups back,
+    # recovers the DP-peer victim via standby, re-stages the re-shard
+    # deltas against the new membership and resumes
+    scs.append(Scenario("gpu-reshard-mid-switch", "gpu_degrade", "d0s0",
+                        "mid_switchover", "reshard",
+                        {"standby_count": 2,
+                         "victims": [f"d{min(dp - 1, 1)}s0"]}))
+    # controller crashes (control-plane interruptions): the controller
+    # process dies and a fresh one restarts from the ControlJournal —
+    # workers re-register, open runs are adopted at every journaled
+    # step class, and bitwise parity must survive the handover
+    crash_mig = f"d0s{pp - 1}"
+    scs.append(Scenario("crash-idle", "controller_crash", "controller",
+                        "between_iter", "replay"))
+    for timing in ("during_prepare", "during_warmup", "mid_switchover"):
+        scs.append(Scenario(f"crash-{timing.replace('_', '-')}",
+                            "controller_crash", "controller", timing,
+                            "replay", {"migrate": crash_mig}))
+    scs.append(Scenario("crash-mid-recovery", "controller_crash",
+                        "controller", "mid_recovery", "replay",
+                        {"fail": crash_mig, "standby_count": 1}))
+    # the control plane dies mid-switchover AND a data-plane machine
+    # dies while it is down: the restarted controller must fold the
+    # victim into the adopted run before resuming it
+    scs.append(Scenario("crash-with-victim", "controller_crash",
+                        "controller", "concurrent_second_failure",
+                        "replay",
+                        {"migrate": crash_mig, "standby_count": 2,
+                         "victims": [f"d{min(dp - 1, 1)}s0"]}))
     # back-to-back cascades: two failures with no training between
     scs.append(Scenario("cascade-two-standbys", "failure", "d0s0",
                         "cascade", "standby",
@@ -336,6 +371,11 @@ REDUCED_NAMES = (
     "fail-concurrent-second", "fail-during-migration",
     # victim sets + GPU-granular recoveries (migrate vs re-shard)
     "fail-k3-joiner", "gpu-degrade-first", "gpu-reshard-first",
+    "gpu-reshard-mid-switch",
+    # controller-crash slice: one crash inside the switching window,
+    # one inside a failure recovery (the only mid_recovery timing),
+    # one with a data-plane victim landing while the plane is down
+    "crash-mid-switchover", "crash-mid-recovery", "crash-with-victim",
     # remaining kind/timing axis values, so the reduced slice covers
     # every axis value of the full matrix (asserted by
     # test_reduced_covers_every_kind_and_timing — grow this tuple when
@@ -351,8 +391,37 @@ def reduced_matrix(dp: int = 2, pp: int = 2) -> List[Scenario]:
 
 
 # ------------------------------------------------------------ execution
-def _inject(ctl: Controller, sc: Scenario) -> int:
-    """Run the scenario's interruption(s); returns the event count."""
+def _inject(ctl: Controller, sc: Scenario):
+    """Run the scenario's interruption(s); returns the event count —
+    or, for controller_crash scenarios, an (event count, restarted
+    Controller) tuple: the original controller instance is the dead
+    process and the caller must continue on the restarted one."""
+    if sc.kind == "controller_crash":
+        victims = [_victim(ctl, r) for r in sc.params.get("victims", [])]
+        events = 1 + len(victims)
+        if sc.timing != "between_iter":
+            step_kind, idx = MID_SWITCH_TIMINGS[sc.timing]
+            try:
+                if sc.timing == "mid_recovery":
+                    ctl.unexpected_failure(
+                        _victim(ctl, sc.params["fail"]),
+                        crash=CrashPoint(step_kind, idx))
+                else:
+                    ctl.expected_migration(
+                        [_victim(ctl, sc.params["migrate"])],
+                        crash=CrashPoint(step_kind, idx))
+            except ControllerCrash:
+                pass
+            else:
+                raise AssertionError("armed CrashPoint never fired")
+            events += 1          # the in-flight op the crash interrupted
+        # data-plane victims land while the control plane is down: the
+        # restarted controller discovers them at adoption time (their
+        # in-memory replicas die with them — adoption's synthetic
+        # mid-switch fault drops those before any recovery reads)
+        for v in victims:
+            ctl.cluster[v].fail()
+        return events, ctl.restart()
     if sc.kind == "expected":
         ctl.expected_migration([_victim(ctl, sc.role)])
         return 1
@@ -369,9 +438,17 @@ def _inject(ctl: Controller, sc: Scenario) -> int:
     if sc.kind == "gpu_degrade":
         policy = sc.params.get(
             "policy", "reshard" if sc.recovery == "reshard" else "migrate")
+        inject = None
+        victims: List[int] = []
+        if sc.timing in MID_SWITCH_TIMINGS:
+            # a machine failure lands inside the recovery run itself
+            # (e.g. inside a re-shard's own switch steps)
+            step_kind, idx = MID_SWITCH_TIMINGS[sc.timing]
+            victims = [_victim(ctl, r) for r in sc.params["victims"]]
+            inject = FaultPoint(step_kind, idx, victims)
         ctl.gpu_fault(_victim(ctl, sc.role), policy=policy,
-                      lose=sc.params.get("lose_gpus", 1))
-        return 1
+                      lose=sc.params.get("lose_gpus", 1), inject=inject)
+        return 1 + len(victims)
     assert sc.kind == "failure", sc.kind
     if sc.timing in ("pre_reduce", "post_reduce"):
         ctl.interrupt_iteration(_victim(ctl, sc.role), sc.timing)
@@ -426,13 +503,22 @@ def run_scenario(sc: Scenario, cfg: CampaignCfg,
 
     lanes0 = {ln: ctl.clock.lane_total(ln) for ln in LANES}
     nrep0, nloss0, step0 = len(ctl.reports), len(eng.losses), eng.step_count
-    events = _inject(ctl, sc)
+    out = _inject(ctl, sc)
+    if isinstance(out, tuple):
+        # controller_crash: the injection killed the controller and
+        # handed back its journal-restarted successor — everything
+        # below (and the post-injection training) runs on it. Reports
+        # of runs adopted across the crash live on the new instance.
+        events, ctl = out
+        reps = list(ctl.reports)
+    else:
+        events = out
+        reps = ctl.reports[nrep0:]
     # iterations committed inside the injection (e.g. the straggler's
     # train-during-prep) land in the loss map too
     for i, st in enumerate(range(step0, eng.step_count)):
         losses[st] = eng.losses[nloss0 + i]
     lanes = {ln: ctl.clock.lane_total(ln) - lanes0[ln] for ln in LANES}
-    reps = ctl.reports[nrep0:]
 
     _train_to(ctl, 1 + cfg.total_iters, losses)
     deltas = [abs(losses[k] - reference[k]) for k in reference
@@ -500,19 +586,30 @@ def summarize(results: List[ScenarioResult]) -> dict:
               if r.recovery == "full_reinit"]
     mid = [r.downtime_per_event_s for r in results
            if (r.timing in MID_SWITCH_TIMINGS or r.kind == "gpu_degrade")
+           and r.kind != "controller_crash"
            and r.ckpt_fallbacks == 0
            and r.recovery not in ("ckpt_restart", "full_reinit")]
+    crash = [r.downtime_per_event_s for r in results
+             if r.kind == "controller_crash"]
     overflow = [r.name for r in results if r.ckpt_fallbacks > 0]
+    # the policy comparison contrasts re-shard vs migrate under
+    # identical conditions, so mid-switch-fault re-shard scenarios
+    # (whose per-event downtime includes a victim recovery) stay out
+    # of it — they are covered by the mid-switch envelope above
     reshard = [r.downtime_per_event_s for r in results
-               if r.kind == "gpu_degrade" and r.recovery == "reshard"]
+               if r.kind == "gpu_degrade" and r.recovery == "reshard"
+               and r.timing == "between_iter"]
     gpu_migrate = [r.downtime_per_event_s for r in results
                    if r.kind == "gpu_degrade"
-                   and r.recovery == "migration"]
+                   and r.recovery == "migration"
+                   and r.timing == "between_iter"]
     med = median(standby) if standby else 0.0
     flat_within = max(standby, default=0.0) / max(med, 1e-12)
     reinit_over = (min(reinit) / max(med, 1e-12)) if reinit else 0.0
     mid_over = max(mid, default=0.0) / max(med, 1e-12)
     mid_ok = not mid or mid_over <= 1.5
+    crash_over = max(crash, default=0.0) / max(med, 1e-12)
+    crash_ok = not crash or crash_over <= 1.5
     return {
         "n_scenarios": len(results),
         "standby_downtime_median_s": med,
@@ -530,9 +627,15 @@ def summarize(results: List[ScenarioResult]) -> dict:
         "gpu_migrate_downtime_max_s": max(gpu_migrate, default=0.0),
         "reshard_vs_migrate": (max(reshard) / max(gpu_migrate)
                                if reshard and gpu_migrate else 0.0),
+        # control-plane crashes: restart + journal replay + worker
+        # re-registration + run adoption must stay inside the same
+        # per-event envelope as the data-plane recoveries
+        "controller_crash_downtime_max_s": max(crash, default=0.0),
+        "controller_crash_max_over_median": crash_over,
+        "controller_crash_claim_ok": crash_ok,
         "all_loss_parity": all(r.loss_parity for r in results),
         "flat_claim_ok": bool(standby) and flat_within <= 1.5
-        and (not reinit or reinit_over > 1.5) and mid_ok,
+        and (not reinit or reinit_over > 1.5) and mid_ok and crash_ok,
     }
 
 
@@ -574,6 +677,11 @@ def to_markdown(payload: dict) -> str:
         f"**{s['reshard_downtime_max_s']:.3f} s** vs "
         f"**{s['gpu_migrate_downtime_max_s']:.3f} s** "
         f"({s['reshard_vs_migrate']:.2f}x)",
+        f"- controller-crash restarts (journal replay + worker "
+        f"re-registration + run adoption): max "
+        f"**{s['controller_crash_downtime_max_s']:.3f} s**/event "
+        f"({s['controller_crash_max_over_median']:.2f}x the standby "
+        f"median; claim holds: {s['controller_crash_claim_ok']})",
         f"- standby-overflow -> checkpoint-restart fallbacks (exempt "
         f"from the envelope): {s['overflow_fallback_scenarios'] or None}",
         f"- bitwise loss parity on every scenario: "

@@ -23,9 +23,12 @@ from repro.core import two_phase
 from repro.core.engine import (IterationInterrupt, PipelineEngine,
                                stage_role_key, stage_type)
 from repro.core.groups import (CommGroup, GroupState, compute_delta_plan,
-                               compute_reshard_plan)
-from repro.core.migration import (FaultPoint, MidSwitchFault, MigState,
-                                  MigrationRun, Step)
+                               compute_reshard_plan, group_to_dict,
+                               plan_from_dict, plan_to_dict)
+from repro.core.journal import ControlJournal
+from repro.core.migration import (ControllerCrash, CrashPoint, FaultPoint,
+                                  MidSwitchFault, MigState, MigrationRun,
+                                  Step)
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
 
 
@@ -63,7 +66,8 @@ class Controller:
                  cost: CostModel = DEFAULT, standby_count: int = 1,
                  per_iteration_ckpt: bool = True,
                  storage_bw: float = 0.0,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 journal: Optional[ControlJournal] = None):
         self.engine = engine
         self.cluster: Cluster = engine.cluster
         self.clock: SimClock = engine.clock
@@ -83,6 +87,57 @@ class Controller:
         self.standbys: List[int] = []
         self.reports: List[MigrationReport] = []
         self.last_run: Optional[MigrationRun] = None
+        # write-ahead ControlJournal: every durable-state mutation below
+        # appends a record, so Controller.restart() can rebuild a fresh
+        # instance after a crash (journal passed in = the durable log
+        # surviving this instance's death)
+        self.journal = journal if journal is not None \
+            else ControlJournal(self.clock, cost)
+
+    # ---------------------------------------------- journal plumbing
+    def _journal_topology(self) -> None:
+        self.journal.append("groups", {"groups": [
+            group_to_dict(g) for _, g in sorted(self.engine.groups.items())
+        ]})
+
+    def _journal_standbys(self) -> None:
+        self.journal.append("standbys", {"mids": list(self.standbys)})
+
+    def _journal_storage_index(self) -> None:
+        self.journal.append("storage_index", {"entries": sorted(
+            [mid, step, list(self.storage_coords[mid])]
+            for mid, (step, _) in self.storage.items())})
+
+    def _journal_epoch(self) -> None:
+        # a NESTED recovery run (victim-set absorption inside
+        # _recover_mid_switch) reaches here while sibling victims are
+        # still dead in the grid with no committed step — record the
+        # epoch of the machines that have one rather than asserting
+        # grid-wide health mid-cycle
+        sig = [[m, int(self.cluster[m].payload["step"])]
+               for m in self.engine.grid.values()
+               if "step" in self.cluster[m].payload]
+        self.journal.append("epoch", {"sig": sorted(sig)})
+
+    def _journal_run_begin(self, run: MigrationRun, op: str,
+                           params: Dict[str, Any]) -> None:
+        """Write-ahead record for a new MigrationRun: the op name and
+        enough of its parameters to rebuild the step list on adoption,
+        plus the step names themselves. Also wires the run's observer
+        so every later durable transition is journaled."""
+        run.jid = self.journal.next_run_id()
+        self.journal.append("run_begin", {
+            "run": run.jid, "label": run.label, "op": op,
+            "params": params, "steps": [s.name for s in run.steps]})
+        run.observer = self._run_observer(run.jid)
+
+    def _run_observer(self, jid: str):
+        def obs(event: str, data: Dict[str, Any]) -> None:
+            self.journal.append(f"run_{event}", {"run": jid, **data})
+        return obs
+
+    def _journal_run_meta(self, run: MigrationRun, **data) -> None:
+        self.journal.append("run_meta", {"run": run.jid, **data})
 
     # ------------------------------------------------------------ setup
     def bootstrap_job(self, machine_ids: List[int],
@@ -94,6 +149,9 @@ class Controller:
         standby_mod.replenish(self.engine, self.cluster, self.standbys,
                               self.clock, self.cost,
                               target=self.standby_count)
+        self._journal_topology()
+        self._journal_standbys()
+        self._journal_epoch()
 
     def _training_mids(self) -> List[int]:
         return list(self.engine.grid.values())
@@ -114,6 +172,7 @@ class Controller:
             # slot's state onto its CURRENT occupant even if the saved
             # machine was swapped out by an intervening recovery
             self.storage_coords[mid] = self.engine.coords_of(mid)
+        self._journal_storage_index()
 
     def train(self, iterations: int, ckpt_every: int = 1) -> List[float]:
         out = []
@@ -149,7 +208,8 @@ class Controller:
                            joiners: Optional[List[int]] = None,
                            train_during_prep: int = 0,
                            on_prepared: Optional[Callable] = None,
-                           inject: Optional[FaultPoint] = None
+                           inject: Optional[FaultPoint] = None,
+                           crash: Optional[CrashPoint] = None
                            ) -> MigrationReport:
         """Live migration with advance notice (§3 steps 1-3), driven as
         a resumable state machine (core/migration.py): IDLE ->
@@ -165,7 +225,11 @@ class Controller:
         journal step, rolls any partially-switched groups back to a
         consistent epoch, recovers the victims (standby promotion),
         re-plans against the new failure set and resumes — completed
-        steps are never redone and no full re-init happens."""
+        steps are never redone and no full re-init happens.
+
+        `crash` arms a CrashPoint: the *controller* dies before the
+        matching step (ControllerCrash propagates out of this call);
+        `Controller.restart()` then adopts the run from the journal."""
         rep = MigrationReport("expected")
         joiners = joiners or self._alloc_joiners(len(leavers))
         pairing = dict(zip(leavers, joiners))
@@ -177,12 +241,37 @@ class Controller:
         for j in pairing.values():
             self.cluster[j].status = NodeStatus.PREPARING
         affected = self._affected_groups(leavers)
-        steady = {m.mid: m.device.used for m in self.cluster.machines.values()}
-        peak0 = {m.mid: m.device.peak for m in self.cluster.machines.values()}
         lanes0 = {ln: self.clock.lane_total(ln)
                   for ln in ("downtime", "overlap")}
         run = MigrationRun(self.clock, fault=inject, label="expected")
+        run.crash = crash
         xferred: set = set()
+        run.set_steps(self._expected_steps(
+            run, rep, leavers, pairing, affected, xferred, lanes0,
+            train_during_prep, on_prepared))
+        self._journal_run_begin(run, "expected_migration", {
+            "leavers": list(leavers),
+            "pairing": sorted([l, j] for l, j in pairing.items()),
+            "gids": [g.gid for g in affected],
+            "train_during_prep": train_during_prep})
+        self._drive_run(run, rep, pairing, affected, xferred,
+                        lanes0["downtime"])
+        return rep
+
+    def _expected_steps(self, run: MigrationRun, rep: MigrationReport,
+                        leavers: List[int], pairing: Dict[int, int],
+                        affected: List[CommGroup], xferred: set,
+                        lanes0: Dict[str, float], train_during_prep: int,
+                        on_prepared: Optional[Callable]) -> List[Step]:
+        """Build the expected-migration step list. Factored out of
+        expected_migration so a restarted controller can rebuild the
+        exact same (name-stable) steps when adopting a journaled run —
+        the closures bind `pairing`/`xferred` by reference, so replans
+        and adoption both take effect without rebuilding."""
+        steady = {m.mid: m.device.used
+                  for m in self.cluster.machines.values()}
+        peak0 = {m.mid: m.device.peak
+                 for m in self.cluster.machines.values()}
 
         # ---- step bodies (close over pairing so replans take effect)
         def prep(g):
@@ -234,6 +323,7 @@ class Controller:
             rep.state_transfer_s += par
             rep.state_bytes += sum(t.nbytes for t in transfers)
             xferred.update(l for l, _ in todo)
+            self._journal_run_meta(run, xferred=sorted(xferred))
 
         def swap(l):
             def fn():
@@ -266,11 +356,7 @@ class Controller:
                   for g in affected]
         steps += [Step(f"swap:{l}", "swap", swap(l)) for l in leavers]
         steps.append(Step("commit", "commit", commit, MigState.COMMITTED))
-        run.set_steps(steps)
-
-        self._drive_run(run, rep, pairing, affected, xferred,
-                        lanes0["downtime"])
-        return rep
+        return steps
 
     def _drive_run(self, run: MigrationRun, rep: MigrationReport,
                    pairing: Dict[int, int], affected: List[CommGroup],
@@ -285,6 +371,15 @@ class Controller:
             except MidSwitchFault as fault:
                 self._recover_mid_switch(run, fault, pairing, affected,
                                          xferred)
+                # the replan may have rewritten the pairing, released
+                # standbys and reverted groups: journal the adoption
+                # context so a crash after this point restarts cleanly
+                self._journal_run_meta(
+                    run, pairing=sorted([l, j]
+                                        for l, j in pairing.items()),
+                    xferred=sorted(xferred))
+                self._journal_standbys()
+                self._journal_topology()
         assert run.fault is None or run.fault.fired, \
             f"armed FaultPoint {run.fault} never matched a step"
         rep.downtime = self.clock.lane_total("downtime") - lanes0_dt
@@ -293,6 +388,10 @@ class Controller:
         rep.journal = [e.step for e in run.journal]
         self.last_run = run
         self.reports.append(rep)
+        # the run is durable-committed: persist the post-switch group
+        # topology and the new epoch signature
+        self._journal_topology()
+        self._journal_epoch()
 
     def _switch_step(self, run: MigrationRun, rep: MigrationReport,
                      g: CommGroup) -> Callable[[], None]:
@@ -314,6 +413,11 @@ class Controller:
                 r = two_phase.ccl_switchover(g, self.cluster, self.clock,
                                              self.cost)
             run.record_switch(g, plan)
+            # the applied plan is durable BEFORE the next step: an
+            # adopted run must be able to revert exactly the groups
+            # that flipped, in order, from the journal alone
+            self.journal.append("run_switch", {
+                "run": run.jid, "gid": g.gid, "plan": plan_to_dict(plan)})
             rep.ccl_phase2_s = max(rep.ccl_phase2_s, r.phase2_time)
             rep.qps_added += r.qps_added
             rep.qps_dropped += r.qps_dropped
@@ -516,7 +620,8 @@ class Controller:
     def unexpected_failure(self, failed: int,
                            use_standby: bool = True,
                            dirty: bool = False,
-                           inject: Optional[FaultPoint] = None
+                           inject: Optional[FaultPoint] = None,
+                           crash: Optional[CrashPoint] = None
                            ) -> MigrationReport:
         """Failure -> detect -> promote standby -> switch (§3 a-c),
         journaled through the same resumable state machine as expected
@@ -526,16 +631,39 @@ class Controller:
 
         dirty=True marks a mid-iteration abort that already mutated
         stayer payloads (post-update): every stayer rolls back to the
-        last checkpoint even when the step counter never advanced."""
+        last checkpoint even when the step counter never advanced.
+
+        `crash` arms a CrashPoint (see expected_migration): the
+        controller dies before the matching step and the recovery is
+        adopted by `Controller.restart()` from the journal."""
         rep = MigrationReport("unexpected")
-        d, s = self.engine.coords_of(failed)
-        fm = self.cluster[failed]
         affected = self._affected_groups([failed])
         lanes0_dt = self.clock.lane_total("downtime")
         run = MigrationRun(self.clock, fault=inject,
                            label=f"failure:{failed}")
+        run.crash = crash
         pairing: Dict[int, int] = {}     # failed -> joiner, set by promote
         ctx: Dict[str, Any] = {}
+        run.set_steps(self._failure_steps(run, rep, failed, affected,
+                                          pairing, ctx, use_standby,
+                                          dirty))
+        self._journal_run_begin(run, "unexpected_failure", {
+            "failed": failed, "use_standby": use_standby, "dirty": dirty,
+            "gids": [g.gid for g in affected]})
+        self._drive_run(run, rep, pairing, affected, set(), lanes0_dt)
+        return rep
+
+    def _failure_steps(self, run: MigrationRun, rep: MigrationReport,
+                       failed: int, affected: List[CommGroup],
+                       pairing: Dict[int, int], ctx: Dict[str, Any],
+                       use_standby: bool, dirty: bool) -> List[Step]:
+        """Build the failure-recovery step list. Factored out of
+        unexpected_failure so a restarted controller can rebuild the
+        exact same (name-stable) steps when adopting a journaled run;
+        the closures bind `pairing`/`ctx` by reference, so both replans
+        and adoption (which seeds them from run_meta records) take
+        effect without rebuilding."""
+        fm = self.cluster[failed]
 
         def detect():
             fm.fail()
@@ -546,6 +674,7 @@ class Controller:
         def promote():
             used_standby = bool(use_standby and self.standbys)
             ctx["used_standby"] = used_standby
+            d, s = self.engine.coords_of(failed)
             if used_standby:
                 j = self.standbys.pop(0)
                 rep.promote_s = standby_mod.promote_standby(
@@ -564,6 +693,12 @@ class Controller:
                 rep.promote_s = self.engine.compile_charge(role)
             pairing[failed] = j
             rep.pairs = {failed: j}
+            # durable before any switch: a restarted controller must
+            # know which standby this run consumed and which joiner it
+            # claimed, or it would double-assign them on adoption
+            self._journal_standbys()
+            self._journal_run_meta(run, used_standby=used_standby,
+                                   pairing=[[failed, j]])
 
         def plan():
             j = pairing[failed]
@@ -633,10 +768,7 @@ class Controller:
         steps += [Step("swap", "swap", swap),
                   Step("commit", "commit", lambda: None,
                        MigState.COMMITTED)]
-        run.set_steps(steps)
-
-        self._drive_run(run, rep, pairing, affected, set(), lanes0_dt)
-        return rep
+        return steps
 
     def _reprepare_stale(self, affected: List[CommGroup],
                          pairing: Dict[int, int]) -> None:
@@ -696,6 +828,7 @@ class Controller:
             self.cost, target=len(self.standbys) + 1)
         rep.pairs = {mid: added[0]}
         rep.overlap = self.clock.now - t0
+        self._journal_standbys()
         self.reports.append(rep)
         return rep
 
@@ -761,8 +894,198 @@ class Controller:
         self.engine.step_count = step
         rep.state_path = "storage"
         rep.downtime = self.clock.now - t0
+        # the restart rebuilt every group and moved the whole grid to
+        # the storage epoch: both are durable-state transitions
+        self._journal_topology()
+        self._journal_epoch()
         self.reports.append(rep)
         return rep
+
+    # ----------------------------------------------------- crash restart
+    def restart(self) -> "Controller":
+        """Controller crash + supervisor respawn: build a FRESH
+        Controller from the durable ControlJournal alone and return it
+        (this instance is the dead process — don't use it again).
+
+        What survives a control-plane crash and how it comes back:
+
+        - durable journal      -> replayed (standby ledger, storage
+          index, staged topology, in-flight run step logs)
+        - worker-held state    -> untouched (engine tensors, in-memory
+          checkpoint replicas, prepared QPs); workers RE-REGISTER with
+          the new controller — the registry is rebuilt from what the
+          live cluster reports, never from the journal
+        - open MigrationRuns   -> adopted: steps rebuilt name-stably
+          from the journaled op + params, done steps skipped, switched
+          groups recoverable via the journaled plans; participants that
+          died while the control plane was down are folded in as a
+          mid-switch fault (rollback/replan/resume)
+        - orphaned PREPARING reservations not claimed by any open run
+          -> released back to the elastic pool
+
+        Lane accounting: the restart lands in a downtime window only
+        if the job was actually stopped when the controller died (an
+        open failure recovery, or any run inside its switching
+        window). Otherwise workers keep training without a controller
+        and the respawn + replay + re-registration all overlap."""
+        state = self.journal.replay()
+        open_runs = {jid: r for jid, r in state["runs"].items()
+                     if not r["committed"]}
+        lane = "downtime" if any(
+            r["op"] == "unexpected_failure" or r["state"] == "switching"
+            for r in open_runs.values()) else "overlap"
+        t = self.cost.controller_restart_s + self.cost.transfer(
+            self.journal.bytes_durable, self.cost.bw_journal)
+        self.clock.advance(t, "controller_restart+replay", lane=lane)
+        # collectives in flight under the dead controller settle before
+        # the new one takes over the ledger
+        self.clock.drain_async(lane=lane)
+        new = Controller(self.engine, cost=self.cost,
+                         standby_count=self.standby_count,
+                         per_iteration_ckpt=self.per_iteration_ckpt,
+                         storage_bw=self.storage_bw,
+                         journal=self.journal)
+        # worker host memory and durable blob storage survive the
+        # crash — only the controller process died. The storage INDEX
+        # (which slot each blob restores to) is rebuilt from the
+        # journal below, not handed over.
+        new.imc = self.imc
+        new.storage = self.storage
+        new._restore_from_journal(state, lane)
+        return new
+
+    def _restore_from_journal(self, state: dict, lane: str) -> None:
+        """Second half of restart(), running on the NEW controller:
+        re-register workers, rebuild controller-private state from the
+        replayed journal, reconcile reservations and adopt open runs."""
+        alive = [m for m in self.cluster.machines.values() if m.alive]
+        self.clock.advance(self.cost.worker_reregister_s * len(alive),
+                           "worker_reregister", lane=lane)
+        # standby ledger: journaled machines that still report alive;
+        # one that died while the controller was down is simply dropped
+        # (the pool replenishes on the next recovery cycle)
+        self.standbys = [mid for mid in state["standbys"]
+                         if self.cluster[mid].alive]
+        self.storage_coords = {
+            int(mid): (int(c[0]), int(c[1]))
+            for mid, _step, c in state["storage_index"]}
+        open_runs = {jid: r for jid, r in state["runs"].items()
+                     if not r["committed"]}
+        # machines claimed by an open run (its reserved joiners) must
+        # keep their PREPARING reservation through the restart; any
+        # other PREPARING machine is an orphan — the run that reserved
+        # it was never journaled as begun, or already swapped it into
+        # the grid — and returns to the elastic pool
+        claimed = set()
+        for r in open_runs.values():
+            pairs = (r["meta"].get("pairing")
+                     or r["params"].get("pairing") or [])
+            claimed |= {int(j) for _l, j in pairs}
+        in_grid = set(self.engine.grid.values())
+        for m in self.cluster.machines.values():
+            if (m.status == NodeStatus.PREPARING
+                    and m.mid not in claimed and m.mid not in in_grid
+                    and m.mid not in self.standbys):
+                m.status = NodeStatus.IDLE
+        # re-registration doubles as a grid health check: machines that
+        # died while the control plane was down never re-register. They
+        # fold into the first adopted run's recovery cycle — or, with
+        # no run to adopt, recover standalone
+        dead_grid = sorted(mid for mid in in_grid
+                           if not self.cluster[mid].alive)
+        first = True
+        for jid in sorted(open_runs, key=lambda s: int(s[1:])):
+            self._adopt_run(jid, open_runs[jid],
+                            extra_dead=dead_grid if first else ())
+            first = False
+        if not open_runs:
+            for mid in dead_grid:
+                self.unexpected_failure(mid)
+
+    def _adopt_run(self, jid: str, r: dict, extra_dead=()) -> None:
+        """Rebuild one in-flight MigrationRun from its journal record
+        and drive it to COMMITTED. The step list is rebuilt through the
+        same builders the original controller used (step names are
+        stable), journaled done-steps are skipped by the state machine,
+        and the rollback ledger is reconstructed from the journaled
+        switch plans. Participants that died while the control plane
+        was down are folded in as a synthetic mid-switch fault before
+        the run resumes."""
+        op, params, meta = r["op"], r["params"], r["meta"]
+        affected = [self.engine.groups[gid] for gid in params["gids"]]
+        pairing = {int(l): int(j)
+                   for l, j in (meta.get("pairing")
+                                or params.get("pairing") or [])}
+        xferred = set(int(m) for m in meta.get("xferred", []))
+        lanes0 = {ln: self.clock.lane_total(ln)
+                  for ln in ("downtime", "overlap")}
+        run = MigrationRun(self.clock, label=r["label"])
+        run.resumes = r["resumes"]
+        known_dead: set = set()
+        if op == "expected_migration":
+            rep = MigrationReport("expected")
+            rep.pairs = pairing
+            # the cascade callback is a live closure and cannot be made
+            # durable; adoption only has to *skip* it (done), never run it
+            has_seam = "cascade_seam" in r["steps"]
+            assert not (has_seam and "cascade_seam" not in r["done"]), \
+                f"{jid}: cannot adopt a run with a pending cascade seam"
+            run.set_steps(self._expected_steps(
+                run, rep, [int(l) for l in params["leavers"]], pairing,
+                affected, xferred, lanes0, params["train_during_prep"],
+                (lambda _ctl: None) if has_seam else None))
+        elif op == "unexpected_failure":
+            rep = MigrationReport("unexpected")
+            if pairing:
+                rep.pairs = dict(pairing)
+            ctx: Dict[str, Any] = {}
+            if "used_standby" in meta:
+                ctx["used_standby"] = meta["used_standby"]
+            known_dead = {int(params["failed"])}
+            run.set_steps(self._failure_steps(
+                run, rep, int(params["failed"]), affected, pairing, ctx,
+                params["use_standby"], params["dirty"]))
+        else:
+            assert op == "reshard_recovery", f"unknown journaled op {op}"
+            rep = MigrationReport("gpu_reshard")
+            run.set_steps(self._reshard_steps(
+                run, rep, int(params["victim"]), affected, lanes0))
+        assert [s.name for s in run.steps] == list(r["steps"]), \
+            (jid, [s.name for s in run.steps], r["steps"])
+        run.done = set(r["done"])
+        run.state = MigState(r["state"])
+        for sw in r["switched"]:
+            run.record_switch(self.engine.groups[sw["gid"]],
+                              plan_from_dict(sw["plan"]))
+        # re-wire the observer under the SAME jid: post-adoption
+        # records extend this run's existing journal history
+        run.jid = jid
+        run.observer = self._run_observer(jid)
+        self.journal.append("run_adopt",
+                            {"run": jid, "done": sorted(run.done)})
+        # victims that landed while the control plane was down: every
+        # dead participant (plus the dead grid machines the health
+        # check surfaced) except the failure this run was already
+        # recovering becomes a synthetic mid-switch fault, handled by
+        # the standard rollback/replan/resume machinery
+        participants = set(pairing) | set(pairing.values())
+        participants |= set(extra_dead)
+        for g in affected:
+            participants |= set(g.members)
+        dead = sorted(m for m in participants - known_dead
+                      if not self.cluster[m].alive)
+        if dead:
+            self._recover_mid_switch(
+                run, MidSwitchFault("controller_restart", dead),
+                pairing, affected, xferred)
+            self._journal_run_meta(
+                run, pairing=sorted([l, j]
+                                    for l, j in pairing.items()),
+                xferred=sorted(xferred))
+            self._journal_standbys()
+            self._journal_topology()
+        self._drive_run(run, rep, pairing, affected, xferred,
+                        lanes0["downtime"])
 
     # ------------------------------------------------------- maintenance
     def rebalance(self, n_machines: int) -> MigrationReport:
@@ -812,7 +1135,8 @@ class Controller:
         return rep
 
     def reshard_recovery(self, victim: int,
-                         inject: Optional[FaultPoint] = None
+                         inject: Optional[FaultPoint] = None,
+                         crash: Optional[CrashPoint] = None
                          ) -> MigrationReport:
         """Intra-machine re-sharding recovery for a partial-GPU fault:
         the victim keeps its grid slot and re-splits its shard across
@@ -822,14 +1146,28 @@ class Controller:
         (groups.compute_reshard_plan / two_phase.ccl_reshard_switchover)
         instead of a membership splice. Driven as a journaled run, so a
         concurrent fault landing inside the re-shard aborts, recovers
-        and resumes like any other migration."""
+        and resumes like any other migration (and a controller crash
+        inside it is adopted by `Controller.restart()`)."""
         rep = MigrationReport("gpu_reshard")
         affected = self._affected_groups([victim])
         lanes0 = {ln: self.clock.lane_total(ln)
                   for ln in ("downtime", "overlap")}
         run = MigrationRun(self.clock, fault=inject,
                            label=f"reshard:{victim}")
+        run.crash = crash
+        run.set_steps(self._reshard_steps(run, rep, victim, affected,
+                                          lanes0))
+        self._journal_run_begin(run, "reshard_recovery", {
+            "victim": victim, "gids": [g.gid for g in affected]})
+        self._drive_run(run, rep, {}, affected, set(),
+                        lanes0["downtime"])
+        return rep
 
+    def _reshard_steps(self, run: MigrationRun, rep: MigrationReport,
+                       victim: int, affected: List[CommGroup],
+                       lanes0: Dict[str, float]) -> List[Step]:
+        """Build the re-shard step list (factored out so a restarted
+        controller can rebuild it when adopting a journaled run)."""
         def gone():
             # the re-sharding machine itself died mid-reshard and a
             # recovery replaced it: the remaining re-shard steps are
@@ -876,7 +1214,4 @@ class Controller:
                   for g in affected]
         steps.append(Step("commit", "commit", lambda: None,
                           MigState.COMMITTED))
-        run.set_steps(steps)
-        self._drive_run(run, rep, {}, affected, set(),
-                        lanes0["downtime"])
-        return rep
+        return steps

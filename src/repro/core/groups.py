@@ -177,6 +177,50 @@ def revert_delta(group: CommGroup, plan: DeltaPlan) -> None:
         f"rollback left {group.gid} with broken rings"
 
 
+# ------------------------------------------------- journal (de)serde
+def connection_to_list(c: Connection) -> List:
+    return [c.src, c.dst, c.channel, c.inter]
+
+
+def connection_from_list(v: Sequence) -> Connection:
+    return Connection(int(v[0]), int(v[1]), int(v[2]), bool(v[3]))
+
+
+def plan_to_dict(plan: DeltaPlan) -> dict:
+    """JSON-typed DeltaPlan for the ControlJournal (int-keyed maps
+    become pair lists so a serialize round trip is identity)."""
+    return {
+        "group": plan.group,
+        "replace": sorted([l, j] for l, j in plan.replace.items()),
+        "add": [connection_to_list(c) for c in plan.add],
+        "drop": [connection_to_list(c) for c in plan.drop],
+        "inherited": plan.inherited,
+        "new_members": list(plan.new_members),
+        "kind": plan.kind,
+    }
+
+
+def plan_from_dict(d: dict) -> DeltaPlan:
+    return DeltaPlan(
+        d["group"], {int(l): int(j) for l, j in d["replace"]},
+        [connection_from_list(c) for c in d["add"]],
+        [connection_from_list(c) for c in d["drop"]],
+        int(d["inherited"]), list(d["new_members"]), d["kind"])
+
+
+def group_to_dict(g: CommGroup) -> dict:
+    """Topology + staged plan of one group, journal-ready. Live
+    connection sets are derivable from (members, channels) — rings are
+    deterministic — so only the membership and the staged delta need
+    to persist."""
+    return {
+        "gid": g.gid, "kind": g.kind, "members": list(g.members),
+        "channels": g.channels, "state": g.state.value,
+        "pending_plan": (plan_to_dict(g.pending_plan)
+                         if g.pending_plan is not None else None),
+    }
+
+
 # ------------------------------------------------------------ layouts
 def build_groups(dp: int, pp: int, machine_grid: Dict[Tuple[int, int], int],
                  channels: int = 8) -> Dict[str, CommGroup]:

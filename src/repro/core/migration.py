@@ -89,6 +89,28 @@ class MidSwitchFault(Exception):
         self.victims = list(victims)
 
 
+@dataclass
+class CrashPoint:
+    """Arms a *controller* crash at the `index`-th step of `kind`: the
+    run raises ControllerCrash immediately before that step executes
+    (once — `fired` latches). Unlike a FaultPoint, the data plane is
+    untouched; it is the control plane that dies, and a restarted
+    controller must adopt the run from its ControlJournal record."""
+    kind: str
+    index: int = 0
+    fired: bool = False
+
+
+class ControllerCrash(Exception):
+    """The controller process died mid-run. The exception unwinds the
+    whole driving call — there is no in-process recovery; recovery is
+    `Controller.restart()` replaying the ControlJournal."""
+
+    def __init__(self, step: str):
+        super().__init__(f"controller crashed before step {step}")
+        self.step = step
+
+
 class MigrationRun:
     """Journaled, resumable execution of a migration's step list."""
 
@@ -96,7 +118,14 @@ class MigrationRun:
                  label: str = ""):
         self.clock = clock
         self.fault = fault
+        self.crash: Optional[CrashPoint] = None
         self.label = label
+        # ControlJournal hook: called as observer(event, data) after
+        # every durable transition (step done, invalidate, revert,
+        # resume) so the controller can journal the run write-ahead
+        self.observer: Optional[Callable[[str, Dict[str, Any]], None]] \
+            = None
+        self.jid = ""                  # journal run id, set at run_begin
         self.state = MigState.IDLE
         self.steps: List[Step] = []
         self.done: Set[str] = set()
@@ -119,6 +148,10 @@ class MigrationRun:
         self.journal.append(JournalEntry(step, self.state.value,
                                          self.clock.now, dict(info)))
 
+    def _emit(self, event: str, **data) -> None:
+        if self.observer is not None:
+            self.observer(event, data)
+
     def set_steps(self, steps: List[Step]) -> None:
         names = [s.name for s in steps]
         assert len(names) == len(set(names)), "step names must be unique"
@@ -134,6 +167,7 @@ class MigrationRun:
         re-execute on the next pass."""
         self.invalidated_log |= self.done & set(names)
         self.done -= set(names)
+        self._emit("invalidate", steps=sorted(names))
 
     # -------------------------------------------------------- execution
     def execute(self) -> "MigrationRun":
@@ -145,6 +179,15 @@ class MigrationRun:
         for st in self.steps:
             i = counts.get(st.kind, 0)
             counts[st.kind] = i + 1
+            c = self.crash
+            if (c is not None and not c.fired and c.kind == st.kind
+                    and c.index == i):
+                # the control plane dies here: nothing after this line
+                # reaches the journal (the append never happened), so a
+                # restart sees exactly the steps committed so far
+                c.fired = True
+                self._log(f"crash@{st.name}")
+                raise ControllerCrash(st.name)
             f = self.fault
             if (f is not None and not f.fired and f.kind == st.kind
                     and f.index == i):
@@ -162,6 +205,7 @@ class MigrationRun:
             if st.state_after is not None:
                 self.state = st.state_after
             self._log(st.name)
+            self._emit("step", step=st.name, state=self.state.value)
         return self
 
     # --------------------------------------------------------- recovery
@@ -189,6 +233,7 @@ class MigrationRun:
                 self.invalidated_log.add(f"switch:{group.gid}")
             self.done.discard(f"switch:{group.gid}")
             self._log(f"revert:{group.gid}", members=list(group.members))
+            self._emit("revert", gid=group.gid)
             n += 1
         self.switched.clear()
         return n
@@ -196,3 +241,4 @@ class MigrationRun:
     def mark_resumed(self, fault: MidSwitchFault) -> None:
         self.resumes += 1
         self._log("resume", after=fault.step, resumes=self.resumes)
+        self._emit("resume", after=fault.step)

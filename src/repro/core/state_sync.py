@@ -101,9 +101,20 @@ def reshard_in_place(engine, mid: int, clock: SimClock,
         f"reshard needs a partial-GPU fault (failed={m.failed_gpus})"
     nbytes = engine.reshard_machine(mid)
     lost = int(nbytes * m.failed_gpus / m.gpus)
-    t = cost.transfer(lost, cost.bw_state_transfer, cost.rtt_tcp) \
-        + cost.transfer(nbytes - lost, cost.bw_intra_node)
-    clock.advance(t, f"reshard:{mid}", lane=lane)
+    t_fetch = cost.transfer(lost, cost.bw_state_transfer, cost.rtt_tcp)
+    t_local = cost.transfer(nbytes - lost, cost.bw_intra_node)
+    peer = live_dp_peer(engine, mid)
+    if peer is not None:
+        # the lost-slice re-fetch occupies the DP replica's compute
+        # channel (the peer serves the read) rather than free-riding;
+        # the survivor-slice NVLink re-layout stays a local charge
+        h = clock.issue_async(("compute", peer), t_fetch,
+                              f"reshard_fetch:{peer}->{mid}")
+        clock.wait_async(h, lane=lane)
+    else:
+        clock.advance(t_fetch, f"reshard_fetch:{mid}", lane=lane)
+    clock.advance(t_local, f"reshard:{mid}", lane=lane)
+    t = t_fetch + t_local
     gbuf = m.device.tagged("grad_buffer")
     m.device.free("grad_buffer", clock.now)
     m.device.alloc(gbuf, "grad_buffer", clock.now)
@@ -164,7 +175,17 @@ def recover_state(engine, failed: int, joiner: int,
         bw = (storage_bw or cost.bw_storage_per_gpu) * jm.gpus
         t = cost.transfer(nbytes, bw, cost.rtt_tcp)
         path = "storage"
-    clock.advance(t, f"state_recover:{failed}->{joiner}", lane=lane)
+    if path == "dp_peer":
+        # the fetch OCCUPIES the replica's compute channel (the peer
+        # reads its own HBM to serve the copy) instead of free-riding:
+        # same lane seconds when the channel is idle, but a fetch
+        # landing while the peer still has collectives in flight
+        # honestly queues behind them on the per-channel ledger
+        h = clock.issue_async(("compute", peer), t,
+                              f"state_recover:{failed}->{joiner}")
+        clock.wait_async(h, lane=lane)
+    else:
+        clock.advance(t, f"state_recover:{failed}->{joiner}", lane=lane)
     engine.set_state(joiner, state)
     jm.device.alloc(nbytes, "train_state", clock.now)
     # a general standby pre-allocated its gradient bucket during

@@ -16,12 +16,13 @@ from hypothesis import strategies as st
 from repro.core import campaign
 
 KINDS = {"expected", "failure", "gpu_degrade", "straggler", "rebalance",
-         "standby_loss"}
+         "standby_loss", "controller_crash"}
 TIMINGS = {"between_iter", "pre_reduce", "post_reduce",
            "during_migration", "during_prepare", "during_warmup",
-           "mid_switchover", "concurrent_second_failure", "cascade"}
+           "mid_switchover", "mid_recovery",
+           "concurrent_second_failure", "cascade"}
 RECOVERIES = {"migration", "standby", "reshard", "ckpt_restart",
-              "full_reinit", "replace"}
+              "full_reinit", "replace", "replay"}
 VICTIM_TOKENS = {"joiner", "leaver", "standby"}
 
 
@@ -200,6 +201,39 @@ def test_victim_set_and_reshard_within_envelope(reduced_results):
     # at tiny-GPT scale re-shard and migrate downtime are comparable;
     # the envelope (not superiority) is the claim under test
     assert 0.0 < summary["reshard_vs_migrate"] <= 1.5, summary
+
+
+@pytest.mark.slow
+def test_controller_crash_scenarios_recover_with_parity(reduced_results):
+    """The control-plane slice: a crashed controller restarts from its
+    journal, workers re-register, open runs are adopted and driven to
+    commit — bitwise parity survives, no iterations are lost, and the
+    restart+replay+adoption downtime stays inside the same 1.5x
+    envelope as plain data-plane standby recovery."""
+    by = {x.name: x for x in reduced_results}
+    for name in ("crash-mid-switchover", "crash-mid-recovery",
+                 "crash-with-victim"):
+        r = by[name]
+        assert r.loss_parity, (name, r.loss_max_delta)
+        assert r.lost_iterations == 0, name
+    # crash + in-flight migration + data-plane victim while down
+    assert by["crash-with-victim"].events == 3
+    assert by["crash-with-victim"].resumes >= 1
+    summary = campaign.summarize(reduced_results)
+    assert summary["controller_crash_claim_ok"], summary
+    assert summary["controller_crash_max_over_median"] <= 1.5, summary
+    assert summary["flat_claim_ok"], summary
+
+
+@pytest.mark.slow
+def test_reshard_mid_switch_fault_resumes(reduced_results):
+    """A machine failure landing inside a re-shard run's own switch
+    steps: the run aborts, rolls back, absorbs the victim via standby
+    and resumes the re-shard against the new membership."""
+    r = {x.name: x for x in reduced_results}["gpu-reshard-mid-switch"]
+    assert r.events == 2
+    assert r.resumes == 1
+    assert r.loss_parity and r.lost_iterations == 0
 
 
 @pytest.mark.slow
