@@ -7,8 +7,8 @@ Fig 13: timeline at k=75 (real-exec). Fig 14: efficiency across all
 injection points (closed form from per-strategy costs)."""
 from __future__ import annotations
 
-from benchmarks.common import COST, build_realexec, csv_line, emit
-from repro.core import baselines
+from benchmarks.common import csv_line, emit
+from repro.core import baselines, campaign
 
 
 def _efficiency(total_iters, it_time, slow_at, slowdown, handle_s,
@@ -75,15 +75,23 @@ def run() -> list:
                       "restart_50": round(e_r50, 3)})
     emit(sweep, "Fig 14: efficiency vs injection point")
 
-    # real-exec demonstration: migrate off a real slowed machine
-    ctl = build_realexec()
-    ctl.bootstrap_job(list(range(4)))
-    ctl.train(2)
-    rep = ctl.handle_straggler(slowdown=1.2)
-    rows.append({"strategy": "real-exec handle_straggler",
-                 "straggler_at": 2,
-                 "efficiency": f"downtime={rep.downtime:.2f}s",
-                 "loss_%": f"overlap={rep.overlap:.2f}s"})
+    # real-exec demonstration: the campaign's gradually-degrading
+    # straggler — the slowdown ramps 1.05 -> 1.15 -> 1.3 over committed
+    # iterations before crossing the migrate threshold, and the numbers
+    # (downtime, overlapped prep, goodput, parity) come from the real
+    # Controller driving real JAX compute, not the closed form above
+    cfg = campaign.CampaignCfg()
+    ref = campaign.reference_run(cfg)
+    sc = {s.name: s for s in campaign.default_matrix(cfg.dp, cfg.pp)}[
+        "straggler-gradual"]
+    r = campaign.run_scenario(sc, cfg, ref)
+    assert r.loss_parity, (r.name, r.loss_max_delta)
+    rows.append({"strategy": "real-exec gradual ramp",
+                 "straggler_at": cfg.warmup_iters,
+                 "efficiency": f"downtime={r.downtime_s:.2f}s "
+                               f"overlap={r.overlap_s:.2f}s",
+                 "loss_%": f"runtime_goodput={r.runtime_goodput:.3f}"})
+    emit(rows[-1:], "Fig 13 real-exec: campaign gradual straggler")
     tm_eff = rows[0]["efficiency"]
     print(csv_line("fig13_tm_efficiency", float(tm_eff) * 1e6,
                    f"loss={100*(1-float(tm_eff)):.1f}%<=4.7% target"))

@@ -13,6 +13,7 @@ sys.path.insert(0, "src")
 MODULES = [
     "iter_throughput",
     "campaign_downtime",
+    "churn_goodput",
     "table1_restart",
     "table2_ccl_setup",
     "fig08_downtime_scale",

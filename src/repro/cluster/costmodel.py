@@ -76,6 +76,19 @@ class CostModel:
     controller_restart_s: float = 0.5       # supervisor respawn + log open
     worker_reregister_s: float = 1e-3       # per-worker re-register RPC
 
+    # ---- churn storms (spot preemption notices + degraded-mode resize)
+    # Spot/maintenance preemptions arrive with advance notice (cloud
+    # SLAs: ~30-120 s); the controller races the two-phase prepare +
+    # warmup + state ship against that deadline. When the machine pool
+    # is exhausted a DP chain retires instead of paying the restart
+    # window: the resize delta-plan staging is local (ms-level, like
+    # the standby delta plan) and no state moves — DP replicas already
+    # hold bitwise-identical stage state.
+    preemption_notice_s: float = 60.0       # default advance notice
+    notice_min_s: float = 30.0              # trace-generator bounds
+    notice_max_s: float = 120.0
+    dp_resize_plan_s: float = 0.05          # per-group resize delta plan
+
     # ---- gradient coalescing (NCCL/DDP-style flat buckets)
     # A contiguous buffer is chunked into pipelined buckets: one full
     # RTT per collective launch, plus a small per-extra-bucket launch

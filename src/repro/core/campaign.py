@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import random
 from dataclasses import dataclass, field
 from statistics import median
 from typing import Any, Dict, List, Optional
@@ -41,6 +42,7 @@ from repro.cluster.costmodel import CostModel, DEFAULT
 from repro.cluster.node import Cluster
 from repro.cluster.simclock import SimClock
 from repro.configs.gpt import tiny_gpt
+from repro.core import standby as standby_mod
 from repro.core.controller import Controller
 from repro.core.engine import PipelineEngine
 from repro.core.migration import ControllerCrash, CrashPoint, FaultPoint
@@ -112,6 +114,23 @@ class ScenarioResult:
     # baseline restart windows paid because the standby pool overflowed
     # mid-cycle (exempt from the flat-downtime envelope, but reported)
     ckpt_fallbacks: int = 0
+    # churn-storm axes: the advance-notice window driving the scenario
+    # (0 for no-notice), and how many dp_shrink / dp_regrow cycles the
+    # degraded-mode continuation actually ran
+    notice_s: float = 0.0
+    degraded_events: int = 0
+    regrow_events: int = 0
+    # goodput accounting over the WHOLE scenario window (gpu-recipes
+    # definitions): ettr = train/(train+downtime); scheduling goodput
+    # additionally credits overlapped prep; runtime goodput is ideal
+    # train seconds (warmup-measured per-iter x committed steps) over
+    # actual train seconds (degraded-mode hosting load lands here);
+    # recovery goodput divides the same ideal by train+downtime — the
+    # headline number the shrink-vs-checkpoint comparison uses
+    ettr: float = 1.0
+    sched_goodput: float = 1.0
+    runtime_goodput: float = 1.0
+    recovery_goodput: float = 1.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -177,6 +196,159 @@ def _train_to(ctl: Controller, target_step: int,
         it = ctl.engine.step_count
         losses[it] = ctl.engine.train_iteration()
         ctl._tick_checkpoints()
+
+
+# ----------------------------------------------------------- churn traces
+@dataclass
+class ChurnEvent:
+    """One interruption in a churn storm. `t` orders events within the
+    trace (informational — the driver executes them sequentially);
+    `target` is a grid coordinate ("d0s1") or "" for replenish events.
+    A non-zero `notice_s` marks a spot preemption with advance notice;
+    `factor` carries the straggle-ramp slowdown."""
+    t: float
+    kind: str                   # preempt | drain | straggle | replenish
+    target: str
+    notice_s: float = 0.0
+    factor: float = 1.0
+
+
+@dataclass
+class ChurnTrace:
+    seed: int
+    horizon_s: float
+    events: List[ChurnEvent] = field(default_factory=list)
+
+
+def generate_churn_trace(seed: int, dp: int = 2, pp: int = 2,
+                         horizon_s: float = 600.0,
+                         wave_rate_per_min: float = 2.0,
+                         notice_p: float = 0.5,
+                         rack_p: float = 0.15,
+                         straggler_p: float = 0.2,
+                         replenish_p: float = 0.25,
+                         max_events: int = 12,
+                         cost: CostModel = DEFAULT) -> ChurnTrace:
+    """Seeded churn-storm generator: Poisson preemption waves whose
+    events carry 30-120s advance notice (spot-style) or none at all
+    (hard failures), one-machine-at-a-time rack drains across a DP
+    chain, gradually-degrading stragglers ramping over consecutive
+    events, and scheduler capacity hand-backs (replenish). The trace
+    always ENDS with enough replenish events to re-grow every retired
+    chain and refill the standby pool — so every storm scenario can be
+    asserted back at full DP degree and bitwise parity."""
+    rng = random.Random(seed)
+    events: List[ChurnEvent] = []
+    t = 0.0
+    while t < horizon_s and len(events) < max_events:
+        t += rng.expovariate(wave_rate_per_min / 60.0)
+        r = rng.random()
+        if r < rack_p:
+            # rack maintenance: the whole chain of one DP rank drains
+            # one machine at a time, each with the same advance notice
+            d = rng.randrange(dp)
+            notice = rng.uniform(cost.notice_min_s, cost.notice_max_s)
+            for s in range(pp):
+                events.append(ChurnEvent(t + s, "drain", f"d{d}s{s}",
+                                         notice))
+        elif r < rack_p + straggler_p:
+            coord = f"d{rng.randrange(dp)}s{rng.randrange(pp)}"
+            for k, f in enumerate((1.05, 1.15, 1.3)):
+                events.append(ChurnEvent(t + k, "straggle", coord,
+                                         factor=f))
+        else:
+            coord = f"d{rng.randrange(dp)}s{rng.randrange(pp)}"
+            notice = (rng.uniform(cost.notice_min_s, cost.notice_max_s)
+                      if rng.random() < notice_p else 0.0)
+            events.append(ChurnEvent(t, "preempt", coord, notice))
+        if rng.random() < replenish_p:
+            events.append(ChurnEvent(t + 5.0, "replenish", ""))
+    for k in range(pp + 2):
+        events.append(ChurnEvent(horizon_s + k, "replenish", ""))
+    return ChurnTrace(seed=seed, horizon_s=horizon_s, events=events)
+
+
+def _resolve_slot(ctl: Controller, coord: str) -> Optional[int]:
+    """Grid coordinate -> current live occupant, or None when the slot
+    is retired (hosted by a DP peer) or its machine already died."""
+    d, s = coord[1:].split("s")
+    key = (int(d), int(s))
+    if key in ctl.engine.hosted:
+        return None
+    mid = ctl.engine.grid.get(key)
+    if mid is None or not ctl.cluster[mid].alive:
+        return None
+    return mid
+
+
+def drive_churn_trace(ctl: Controller, trace: ChurnTrace,
+                      baseline: bool = False,
+                      max_step: Optional[int] = None) -> int:
+    """Execute a churn trace against a live Controller; returns the
+    number of interruptions injected. With baseline=True every fault
+    takes the checkpoint-restart path (storage saved after each commit
+    so no work is ever retrained — a conservative gift to the
+    baseline); otherwise noticed events run the proactive drain,
+    no-notice events the standby path, and a dry bounded pool falls
+    through to degraded-mode dp_shrink. One committed iteration is
+    interleaved after each fault while `max_step` allows, so degraded
+    windows actually train (and pay their hosting load)."""
+    events = 0
+
+    def maybe_train():
+        if max_step is not None and ctl.engine.step_count < max_step:
+            ctl.engine.train_iteration()
+            ctl._tick_checkpoints()
+            if baseline:
+                ctl.save_to_storage()
+
+    for ev in trace.events:
+        if ev.kind == "replenish":
+            # the provider hands one machine back; retired chains
+            # re-grow oldest-first, then the standby pool refills from
+            # whatever idle capacity remains
+            if (ctl.engine.hosted
+                    or len(ctl.standbys) < ctl.standby_count):
+                ctl.cluster.add_machine()
+            ctl.maybe_regrow()
+            spares = ctl._idle_spares()
+            target = min(ctl.standby_count,
+                         len(ctl.standbys) + len(spares))
+            if target > len(ctl.standbys):
+                standby_mod.replenish(ctl.engine, ctl.cluster,
+                                      ctl.standbys, ctl.clock, ctl.cost,
+                                      target=target)
+                ctl._journal_standbys()
+            continue
+        mid = _resolve_slot(ctl, ev.target)
+        if mid is None:
+            continue
+        if ev.kind == "straggle":
+            ctl.cluster[mid].straggle_factor = ev.factor
+            # migrating a straggler away trains one overlapped
+            # iteration, so it needs both a joiner AND step budget
+            if (ev.factor >= 1.25
+                    and (ctl.elastic_pool or ctl._idle_spares())
+                    and (max_step is None
+                         or ctl.engine.step_count < max_step)):
+                events += 1
+                ctl.handle_straggler(slowdown=ev.factor, victim=mid)
+            continue
+        assert ev.kind in ("preempt", "drain"), ev.kind
+        events += 1
+        if baseline:
+            ctl.checkpoint_restart(mid)
+            ctl.save_to_storage()
+        elif ev.notice_s > 0 and (ctl.elastic_pool or ctl._idle_spares()):
+            ctl.preemption_notice(mid, notice_s=ev.notice_s)
+        else:
+            # no notice — or a notice with nowhere to drain TO (bounded
+            # pool, no idle spare): the proactive path needs a joiner,
+            # so the revocation lands as an unexpected failure (standby
+            # promotion, or degraded-mode shrink once the pool is dry)
+            ctl.unexpected_failure(mid)
+        maybe_train()
+    return events
 
 
 # ------------------------------------------------------------- matrices
@@ -351,6 +523,39 @@ def default_matrix(dp: int = 2, pp: int = 2) -> List[Scenario]:
         scs.append(Scenario(f"straggler-{rn}", "straggler", f"d0s{s}",
                             "between_iter", "migration",
                             {"slowdown": 1.3}))
+    # gradually-degrading straggler: the slowdown ramps over committed
+    # iterations before crossing the migrate threshold (fig13 feeds on
+    # this scenario's real-Controller numbers)
+    scs.append(Scenario("straggler-gradual", "straggler", "d0s0",
+                        "between_iter", "migration",
+                        {"ramp": [1.05, 1.15, 1.3]}))
+    # advance-notice drains (spot preemptions): with a window longer
+    # than prepare+warmup the switchover lands with near-zero downtime;
+    # a too-short window expires mid-prepare and falls back to the
+    # unexpected-failure path (hence recovery "standby")
+    scs.append(Scenario("notice-drain-long", "notice_drain",
+                        f"d0s{pp - 1}", "between_iter", "migration",
+                        {"notice_s": 120.0}))
+    scs.append(Scenario("notice-drain-short", "notice_drain", "d0s0",
+                        "between_iter", "standby", {"notice_s": 0.3}))
+    scs.append(Scenario("notice-drain-rack", "notice_drain", "d0s0",
+                        "between_iter", "migration",
+                        {"notice_s": 90.0,
+                         "drain": [f"d0s{s}" for s in range(pp)]}))
+    # churn storms: a seeded trace of preemption waves, drains,
+    # stragglers and capacity hand-backs. The degraded variant runs a
+    # BOUNDED pool (no elastic machines): once standbys and spares are
+    # gone the DP degree shrinks via rank-hosting and re-grows when the
+    # scheduler hands capacity back. The ckpt variant replays the SAME
+    # trace against the checkpoint-restart baseline.
+    scs.append(Scenario("churn-storm-degraded", "churn_storm", "trace",
+                        "between_iter", "degraded",
+                        {"storm_seed": 1305, "max_step": 6,
+                         "save_storage": True}))
+    scs.append(Scenario("churn-storm-ckpt", "churn_storm", "trace",
+                        "between_iter", "ckpt_restart",
+                        {"storm_seed": 1305, "max_step": 6,
+                         "save_storage": True, "baseline": True}))
     # periodic rebalance: batch migrations of different sizes
     scs.append(Scenario("rebalance-1", "rebalance", "batch1",
                         "between_iter", "migration", {"n": 1}))
@@ -381,6 +586,11 @@ REDUCED_NAMES = (
     # test_reduced_covers_every_kind_and_timing — grow this tuple when
     # a new axis value lands)
     "straggler-first", "rebalance-1", "cascade-two-standbys",
+    # churn-storm slice: one long-notice drain (near-zero downtime),
+    # one expiring notice (fallback path), and the degraded-vs-ckpt
+    # storm pair the goodput comparison needs
+    "notice-drain-long", "notice-drain-short",
+    "churn-storm-degraded", "churn-storm-ckpt",
 )
 
 
@@ -425,7 +635,43 @@ def _inject(ctl: Controller, sc: Scenario):
     if sc.kind == "expected":
         ctl.expected_migration([_victim(ctl, sc.role)])
         return 1
+    if sc.kind == "notice_drain":
+        drain = sc.params.get("drain")
+        if drain:
+            # rack drain: one machine at a time under the same notice
+            for role in drain:
+                ctl.preemption_notice(_victim(ctl, role),
+                                      notice_s=sc.params["notice_s"])
+            return len(drain)
+        ctl.preemption_notice(_victim(ctl, sc.role),
+                              notice_s=sc.params.get("notice_s"))
+        return 1
+    if sc.kind == "churn_storm":
+        cfg_shape = sc.params
+        trace = generate_churn_trace(
+            cfg_shape.get("storm_seed", 1305),
+            dp=ctl.engine.dp, pp=ctl.engine.pp,
+            max_events=cfg_shape.get("max_events", 12))
+        if sc.recovery == "degraded":
+            ctl.elastic_pool = False
+            ctl.degraded_mode = True
+        n = drive_churn_trace(ctl, trace,
+                              baseline=cfg_shape.get("baseline", False),
+                              max_step=cfg_shape.get("max_step"))
+        return max(n, 1)
     if sc.kind == "straggler":
+        ramp = sc.params.get("ramp")
+        if ramp:
+            # gradual degradation: the factor ramps over committed
+            # iterations; only the final value crosses the migrate
+            # threshold
+            mid = _victim(ctl, sc.role)
+            for f in ramp[:-1]:
+                ctl.cluster[mid].straggle_factor = f
+                ctl.engine.train_iteration()
+                ctl._tick_checkpoints()
+            ctl.handle_straggler(slowdown=ramp[-1], victim=mid)
+            return 1
         ctl.handle_straggler(slowdown=sc.params.get("slowdown", 1.3),
                              victim=_victim(ctl, sc.role))
         return 1
@@ -497,7 +743,13 @@ def run_scenario(sc: Scenario, cfg: CampaignCfg,
                            sc.params.get("per_iteration_ckpt", True))
     eng = ctl.engine
     losses: Dict[int, float] = {0: eng.losses[0]}   # pre-record step
+    warm_t0 = ctl.clock.lane_total("train")
+    warm_s0 = eng.step_count
     _train_to(ctl, 1 + cfg.warmup_iters, losses)
+    # undisturbed per-iteration train time, measured over the warmup
+    # window — the "ideal" the goodput ratios are computed against
+    ideal_iter = (ctl.clock.lane_total("train") - warm_t0) \
+        / max(eng.step_count - warm_s0, 1)
     if sc.params.get("save_storage"):
         ctl.save_to_storage()
 
@@ -525,6 +777,11 @@ def run_scenario(sc: Scenario, cfg: CampaignCfg,
               if k in losses]
     parity = (set(losses) == set(reference)
               and bool(deltas) and max(deltas) == 0.0)
+    train_total = ctl.clock.lane_total("train")
+    down_total = ctl.clock.lane_total("downtime")
+    over_total = ctl.clock.lane_total("overlap")
+    ideal_total = ideal_iter * eng.step_count
+    busy = max(train_total + down_total, 1e-12)
     return ScenarioResult(
         name=sc.name, kind=sc.kind, role=sc.role, timing=sc.timing,
         recovery=sc.recovery, events=events,
@@ -540,7 +797,15 @@ def run_scenario(sc: Scenario, cfg: CampaignCfg,
         loss_parity=parity, steps=eng.step_count, seed=ctl.seed,
         resumes=sum(r.resumes for r in reps),
         victims=len(sc.params.get("victims", [])),
-        ckpt_fallbacks=sum(r.ckpt_fallbacks for r in reps))
+        ckpt_fallbacks=sum(r.ckpt_fallbacks for r in reps),
+        notice_s=float(sc.params.get("notice_s", 0.0)),
+        degraded_events=sum(1 for r in reps if r.kind == "dp_shrink"),
+        regrow_events=sum(1 for r in reps if r.kind == "dp_regrow"),
+        ettr=train_total / busy,
+        sched_goodput=(train_total + over_total)
+        / max(train_total + over_total + down_total, 1e-12),
+        runtime_goodput=ideal_total / max(train_total, 1e-12),
+        recovery_goodput=ideal_total / busy)
 
 
 def reference_run(cfg: CampaignCfg,
@@ -580,8 +845,13 @@ def summarize(results: List[ScenarioResult]) -> dict:
     the checkpoint-restart baseline are exempt from the envelope but
     reported by name, and the re-shard-vs-migrate comparison for
     GPU-granular faults is broken out."""
+    # churn-storm kinds stay out of the flat-downtime envelope: a
+    # notice drain is deliberately BELOW it (that asymmetry is its own
+    # claim below) and a storm aggregates many heterogeneous events
+    churn_kinds = ("notice_drain", "churn_storm")
     standby = [r.downtime_per_event_s for r in results
-               if r.recovery == "standby" and r.ckpt_fallbacks == 0]
+               if r.recovery == "standby" and r.ckpt_fallbacks == 0
+               and r.kind not in churn_kinds]
     reinit = [r.downtime_per_event_s for r in results
               if r.recovery == "full_reinit"]
     mid = [r.downtime_per_event_s for r in results
@@ -603,8 +873,22 @@ def summarize(results: List[ScenarioResult]) -> dict:
                    if r.kind == "gpu_degrade"
                    and r.recovery == "migration"
                    and r.timing == "between_iter"]
+    # advance-notice drains: windows at least as long as prepare +
+    # warmup must land the switchover at a fraction of the no-notice
+    # standby median (expired/short notices fall back and are exempt)
+    long_notice = [r.downtime_per_event_s for r in results
+                   if r.kind == "notice_drain" and r.notice_s >= 5.0]
+    # degraded-mode continuation vs checkpoint-restart under the SAME
+    # churn trace: the shrink path must win on recovery goodput
+    deg = [r.recovery_goodput for r in results
+           if r.kind == "churn_storm" and r.recovery == "degraded"]
+    ck = [r.recovery_goodput for r in results
+          if r.kind == "churn_storm" and r.recovery == "ckpt_restart"]
+    churn_parity = [r.loss_parity for r in results
+                    if r.kind in churn_kinds]
     med = median(standby) if standby else 0.0
     flat_within = max(standby, default=0.0) / max(med, 1e-12)
+    notice_ratio = max(long_notice, default=0.0) / max(med, 1e-12)
     reinit_over = (min(reinit) / max(med, 1e-12)) if reinit else 0.0
     mid_over = max(mid, default=0.0) / max(med, 1e-12)
     mid_ok = not mid or mid_over <= 1.5
@@ -633,6 +917,19 @@ def summarize(results: List[ScenarioResult]) -> dict:
         "controller_crash_downtime_max_s": max(crash, default=0.0),
         "controller_crash_max_over_median": crash_over,
         "controller_crash_claim_ok": crash_ok,
+        # churn-storm goodput claims (BENCH_goodput feeds on these):
+        # (a) long-notice drains at <= 0.25x the no-notice standby
+        # median, (b) degraded-mode beats checkpoint-restart on
+        # recovery goodput under the same trace, (c) every churn
+        # scenario re-grows to full DP degree at bitwise parity
+        "notice_drain_downtime_max_s": max(long_notice, default=0.0),
+        "notice_drain_over_median": notice_ratio,
+        "notice_claim_ok": not long_notice or notice_ratio <= 0.25,
+        "degraded_recovery_goodput_min": min(deg, default=0.0),
+        "ckpt_recovery_goodput_max": max(ck, default=0.0),
+        "degraded_beats_ckpt": (min(deg) > max(ck)) if deg and ck
+        else None,
+        "churn_parity_ok": all(churn_parity) if churn_parity else None,
         "all_loss_parity": all(r.loss_parity for r in results),
         "flat_claim_ok": bool(standby) and flat_within <= 1.5
         and (not reinit or reinit_over > 1.5) and mid_ok and crash_ok,
@@ -684,6 +981,17 @@ def to_markdown(payload: dict) -> str:
         f"median; claim holds: {s['controller_crash_claim_ok']})",
         f"- standby-overflow -> checkpoint-restart fallbacks (exempt "
         f"from the envelope): {s['overflow_fallback_scenarios'] or None}",
+        f"- advance-notice drains: max "
+        f"**{s['notice_drain_downtime_max_s']:.3f} s**/event "
+        f"({s['notice_drain_over_median']:.2f}x the no-notice standby "
+        f"median; <= 0.25x claim holds: {s['notice_claim_ok']})",
+        f"- degraded-mode vs checkpoint-restart recovery goodput under "
+        f"the same churn trace: "
+        f"**{s['degraded_recovery_goodput_min']:.3f}** vs "
+        f"**{s['ckpt_recovery_goodput_max']:.3f}** "
+        f"(shrink wins: {s['degraded_beats_ckpt']})",
+        f"- churn scenarios re-grown to full DP at bitwise parity: "
+        f"**{s['churn_parity_ok']}**",
         f"- bitwise loss parity on every scenario: "
         f"**{s['all_loss_parity']}**",
         f"- constant-downtime claim holds: **{s['flat_claim_ok']}**",

@@ -23,12 +23,14 @@ from repro.core import two_phase
 from repro.core.engine import (IterationInterrupt, PipelineEngine,
                                stage_role_key, stage_type)
 from repro.core.groups import (CommGroup, GroupState, compute_delta_plan,
+                               compute_dp_resize_plan,
                                compute_reshard_plan, group_to_dict,
                                plan_from_dict, plan_to_dict)
 from repro.core.journal import ControlJournal
-from repro.core.migration import (ControllerCrash, CrashPoint, FaultPoint,
+from repro.core.migration import (ControllerCrash, CrashPoint,
+                                  DeadlinePoint, FaultPoint,
                                   MidSwitchFault, MigState, MigrationRun,
-                                  Step)
+                                  NoticeExpired, Step)
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
 
 
@@ -85,6 +87,15 @@ class Controller:
         self.storage: Dict[int, Tuple[int, dict]] = {}
         self.storage_coords: Dict[int, Tuple[int, int]] = {}
         self.standbys: List[int] = []
+        # Churn-storm policy knobs. elastic_pool=False models a real
+        # bounded cluster: _alloc_joiners stops inventing machines and
+        # a recovery that finds the pool dry must degrade instead.
+        # degraded_mode=True arms that degradation: when an unexpected
+        # failure has no standby and no spare, the victim's whole DP
+        # chain retires (dp_shrink) and training continues at reduced
+        # throughput rather than paying the checkpoint-restart window.
+        self.elastic_pool: bool = True
+        self.degraded_mode: bool = False
         self.reports: List[MigrationReport] = []
         self.last_run: Optional[MigrationRun] = None
         # write-ahead ControlJournal: every durable-state mutation below
@@ -193,15 +204,28 @@ class Controller:
         with standby replenishment or an in-flight migration's reserved
         joiners — can never double-assign one machine to two grid
         slots. Degraded / straggling leavers return to the pool but
-        must not be handed back to the job as joiners."""
+        must not be handed back to the job as joiners.
+
+        With elastic_pool=False the pool is bounded: the list comes
+        back SHORT when the idle spares run out, and the caller owns
+        the shortage (degraded-mode shrink, or checkpoint-restart)."""
         out: List[int] = []
         for _ in range(n):
             idle = [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
                     if m.mid not in self.standbys and m.is_healthy]
-            mid = idle[0] if idle else self.cluster.add_machine().mid
+            if idle:
+                mid = idle[0]
+            elif self.elastic_pool:
+                mid = self.cluster.add_machine().mid
+            else:
+                break
             self.cluster[mid].status = NodeStatus.PREPARING
             out.append(mid)
         return out
+
+    def _idle_spares(self) -> List[int]:
+        return [m.mid for m in self.cluster.by_status(NodeStatus.IDLE)
+                if m.mid not in self.standbys and m.is_healthy]
 
     # ----------------------------------------------- expected interruption
     def expected_migration(self, leavers: List[int],
@@ -209,7 +233,8 @@ class Controller:
                            train_during_prep: int = 0,
                            on_prepared: Optional[Callable] = None,
                            inject: Optional[FaultPoint] = None,
-                           crash: Optional[CrashPoint] = None
+                           crash: Optional[CrashPoint] = None,
+                           notice_s: Optional[float] = None
                            ) -> MigrationReport:
         """Live migration with advance notice (§3 steps 1-3), driven as
         a resumable state machine (core/migration.py): IDLE ->
@@ -245,6 +270,15 @@ class Controller:
                   for ln in ("downtime", "overlap")}
         run = MigrationRun(self.clock, fault=inject, label="expected")
         run.crash = crash
+        if notice_s is not None:
+            # advance-notice drain: the leavers are revoked for real
+            # when the notice window closes, whatever step the run is
+            # on. The deadline reads the live clock so overlap-lane
+            # work (warmup, state ship) eats into the window honestly.
+            run.deadline = DeadlinePoint(self.clock.now + notice_s,
+                                         lambda: self.clock.now,
+                                         victims=list(leavers))
+            rep.kind = "notice_drain"
         xferred: set = set()
         run.set_steps(self._expected_steps(
             run, rep, leavers, pairing, affected, xferred, lanes0,
@@ -253,7 +287,8 @@ class Controller:
             "leavers": list(leavers),
             "pairing": sorted([l, j] for l, j in pairing.items()),
             "gids": [g.gid for g in affected],
-            "train_during_prep": train_during_prep})
+            "train_during_prep": train_during_prep,
+            "notice_s": notice_s})
         self._drive_run(run, rep, pairing, affected, xferred,
                         lanes0["downtime"])
         return rep
@@ -305,8 +340,13 @@ class Controller:
         def barrier():
             rep.overlap = self.clock.lane_total("overlap") \
                 - lanes0["overlap"]
+            # with an advance notice the controller schedules the
+            # switch AT an iteration boundary — the wait for the drain
+            # hides inside the notice window (training continues), so
+            # only the transfer + switchover open the downtime window
+            lane = "overlap" if run.deadline is not None else "downtime"
             self.clock.advance(self.cost.iteration_barrier, "drain",
-                               lane="downtime")
+                               lane=lane)
             rep.barrier += self.cost.iteration_barrier
 
         def xfer():
@@ -358,6 +398,38 @@ class Controller:
         steps.append(Step("commit", "commit", commit, MigState.COMMITTED))
         return steps
 
+    def preemption_notice(self, leaver: int,
+                          notice_s: Optional[float] = None,
+                          train_during_prep: int = 0,
+                          inject: Optional[FaultPoint] = None,
+                          crash: Optional[CrashPoint] = None
+                          ) -> MigrationReport:
+        """Spot-preemption with advance notice: the provider revokes
+        `leaver` in `notice_s` seconds. Run the proactive drain
+        (two-phase prepare + warmup + state ship) against that
+        deadline; if the window is long enough the switchover lands
+        with near-zero downtime, and if the deadline fires mid-prepare
+        the run absorbs it as a mid-switch fault on the leaver — benign
+        when the state already shipped, the unexpected-failure path
+        otherwise. Either way, once the run commits the machine is
+        GONE: the preemption executes even when the drain beat it."""
+        if notice_s is None:
+            notice_s = self.cost.preemption_notice_s
+        rep = self.expected_migration(
+            [leaver], train_during_prep=train_during_prep,
+            inject=inject, crash=crash, notice_s=notice_s)
+        rep.kind = "notice_drain"
+        lm = self.cluster[leaver]
+        if lm.alive and leaver not in self.engine.grid.values():
+            # the drain beat the deadline — the provider still takes
+            # the machine back; it must not linger as a reusable spare
+            lm.fail()
+            self.imc.drop_node(leaver)
+            if leaver in self.standbys:
+                self.standbys.remove(leaver)
+                self._journal_standbys()
+        return rep
+
     def _drive_run(self, run: MigrationRun, rep: MigrationReport,
                    pairing: Dict[int, int], affected: List[CommGroup],
                    xferred: set, lanes0_dt: float) -> None:
@@ -408,6 +480,9 @@ class Controller:
                 return
             if plan.kind == "reshard":
                 r = two_phase.ccl_reshard_switchover(
+                    g, self.cluster, self.clock, self.cost)
+            elif plan.kind == "dp_resize":
+                r = two_phase.ccl_resize_switchover(
                     g, self.cluster, self.clock, self.cost)
             else:
                 r = two_phase.ccl_switchover(g, self.cluster, self.clock,
@@ -636,6 +711,16 @@ class Controller:
         `crash` arms a CrashPoint (see expected_migration): the
         controller dies before the matching step and the recovery is
         adopted by `Controller.restart()` from the journal."""
+        if (self.degraded_mode and use_standby and not self.standbys
+                and not self.elastic_pool and not self._idle_spares()):
+            # pool-exhausting storm: no standby, no spare, no elastic
+            # growth. Retire the victim's DP chain and keep training
+            # degraded (the chain's survivors replenish the pool for
+            # the NEXT fault) — unless this is the last chain, where
+            # only the checkpoint-restart baseline remains.
+            if self._can_shrink(failed):
+                return self.dp_shrink(failed, inject=inject, crash=crash)
+            return self.checkpoint_restart(failed)
         rep = MigrationReport("unexpected")
         affected = self._affected_groups([failed])
         lanes0_dt = self.clock.lane_total("downtime")
@@ -857,7 +942,15 @@ class Controller:
         self.clock.advance(base.downtime, "full_reinit_restart",
                            lane="downtime")
 
-        j = self._alloc_joiners(1)[0]
+        alloc = self._alloc_joiners(1)
+        if not alloc:
+            # bounded pool fully dry: the restart window is minutes
+            # long — plenty for the scheduler to hand capacity back, so
+            # the baseline may grow even when live migration could not
+            assert not self.elastic_pool
+            alloc = [self.cluster.add_machine().mid]
+            self.cluster[alloc[0]].status = NodeStatus.PREPARING
+        j = alloc[0]
         rep.pairs = {failed: j}
         jm = self.cluster[j]
         step = None
@@ -900,6 +993,260 @@ class Controller:
         self._journal_epoch()
         self.reports.append(rep)
         return rep
+
+    # -------------------------------------------- degraded-mode DP resize
+    def _can_shrink(self, victim: int) -> bool:
+        """Shrink is possible while more than one DP chain is still
+        physically staffed and the victim actually occupies the grid."""
+        live = self.engine.dp - len({dd for dd, _ in self.engine.hosted})
+        return victim in self.engine.grid.values() and live > 1
+
+    def dp_shrink(self, victim: int,
+                  inject: Optional[FaultPoint] = None,
+                  crash: Optional[CrashPoint] = None) -> MigrationReport:
+        """Degraded-mode continuation: `victim` died with the standby
+        pool dry in a bounded cluster, so its whole DP chain retires
+        instead of being replaced. The chain's logical ranks stay in
+        the LOGICAL grid — hosted by surviving same-stage replicas, so
+        microbatch split, gradient averaging and the loss sequence are
+        untouched (bitwise parity by construction) — while the dp rings
+        physically shrink and throughput degrades by the hosting load.
+        The chain's still-alive machines come back as spares/standbys:
+        the shrink converts doomed capacity into recovery headroom for
+        the rest of the storm. Assumes iteration-boundary timing (the
+        storm scenarios drain between iterations)."""
+        rep = MigrationReport("dp_shrink")
+        d_gone, _s = self.engine.coords_of(victim)
+        chain = {s: self.engine.grid[(d_gone, s)]
+                 for s in range(self.engine.pp)
+                 if (d_gone, s) in self.engine.grid}
+        members = set(chain.values())
+        affected = [g for g in self.engine.groups.values()
+                    if set(g.members) & members]
+        lanes0 = {ln: self.clock.lane_total(ln)
+                  for ln in ("downtime", "overlap")}
+        run = MigrationRun(self.clock, fault=inject,
+                           label=f"dp_shrink:{victim}")
+        run.crash = crash
+        run.set_steps(self._dp_shrink_steps(run, rep, victim, d_gone,
+                                            chain, affected, lanes0))
+        self._journal_run_begin(run, "dp_resize", {
+            "direction": "shrink", "victim": victim, "d_gone": d_gone,
+            "chain": sorted([s, m] for s, m in chain.items()),
+            "gids": [g.gid for g in affected]})
+        self._drive_run(run, rep, {}, affected, set(), lanes0["downtime"])
+        return rep
+
+    def _dp_shrink_steps(self, run: MigrationRun, rep: MigrationReport,
+                         victim: int, d_gone: int, chain: Dict[int, int],
+                         affected: List[CommGroup],
+                         lanes0: Dict[str, float]) -> List[Step]:
+        members = set(chain.values())
+
+        def detect():
+            vm = self.cluster[victim]
+            if vm.alive:
+                vm.fail()
+            self.imc.drop_node(victim)
+            self.clock.advance(self.cost.detect_failure, "detect",
+                               lane="downtime")
+
+        def plan():
+            todo = [g for g in affected
+                    if f"switch:{g.gid}" not in run.done]
+            for g in todo:
+                gone = [m for m in g.members if m in members]
+                p = compute_dp_resize_plan(g, remove=gone)
+                g.pending_plan = p
+                g.pending_members = p.new_members
+                g.state = GroupState.READY_TO_SWITCHOUT
+            self.clock.advance(self.cost.dp_resize_plan_s * len(todo),
+                               "dp_resize_plan", lane="downtime")
+
+        def barrier():
+            rep.overlap = self.clock.lane_total("overlap") \
+                - lanes0["overlap"]
+            self.clock.advance(self.cost.iteration_barrier, "drain",
+                               lane="downtime")
+            rep.barrier += self.cost.iteration_barrier
+
+        def resize():
+            freed = self.engine.dp_retire(d_gone)
+            # hosts carve out the extra gradient buckets for the ranks
+            # they now serve — local HBM allocs, parallel across hosts
+            t = max((self.cost.transfer(self.engine.grad_buffer_bytes(s),
+                                        self.cost.bw_intra_node)
+                     for s in range(self.engine.pp)), default=0.0)
+            self.clock.advance(t, "hosted_grad_alloc", lane="downtime")
+            self._journal_run_meta(
+                run, freed=sorted(freed),
+                hosts=sorted([k[0], k[1], h]
+                             for k, h in self.engine.hosted.items()))
+
+        def commit():
+            # the freed chain-mates become the standbys that absorb the
+            # NEXT fault — capped at the configured pool size so a
+            # bounded cluster never grows elastically here
+            idle = self._idle_spares()
+            target = min(self.standby_count,
+                         len(self.standbys) + len(idle))
+            if target > len(self.standbys):
+                standby_mod.replenish(self.engine, self.cluster,
+                                      self.standbys, self.clock,
+                                      self.cost, target=target)
+            self._journal_standbys()
+
+        steps = [Step("detect", "detect", detect),
+                 Step("prepare:all", "prepare", plan,
+                      MigState.DELTA_PREPARED),
+                 Step("barrier", "barrier", barrier, MigState.SWITCHING),
+                 Step("resize", "recover", resize)]
+        steps += [Step(f"switch:{g.gid}", "switch",
+                       self._switch_step(run, rep, g))
+                  for g in affected]
+        steps.append(Step("commit", "commit", commit, MigState.COMMITTED))
+        return steps
+
+    def dp_regrow(self, inject: Optional[FaultPoint] = None,
+                  crash: Optional[CrashPoint] = None
+                  ) -> Optional[MigrationReport]:
+        """Re-grow one retired DP chain once replacement capacity is
+        back (a standby replenished, spares freed, or — with an elastic
+        pool — fresh machines). Staffing prefers warm standbys; each
+        new machine receives a bitwise copy of its hosting replica's
+        state (parallel, per-host RDMA), the hosted overlay clears, and
+        the dp rings splice the members back in. Returns None (and
+        mutates nothing) when a bounded pool cannot staff a full
+        chain."""
+        retired = sorted({dd for dd, _ in self.engine.hosted})
+        if not retired:
+            return None
+        d = retired[0]
+        pp = self.engine.pp
+        cand = list(self.standbys)
+        cand += [m for m in self._idle_spares() if m not in cand]
+        if len(cand) < pp and self.elastic_pool:
+            while len(cand) < pp:
+                cand.append(self.cluster.add_machine().mid)
+        if len(cand) < pp:
+            return None
+        staff = {s: cand[s] for s in range(pp)}
+        for mid in staff.values():
+            if mid in self.standbys:
+                self.standbys.remove(mid)
+            self.cluster[mid].status = NodeStatus.PREPARING
+        self._journal_standbys()
+        rep = MigrationReport("dp_regrow")
+        staffed = set(staff.values())
+        # every per-stage dp ring splices a member back; only this
+        # chain's pp ring revives
+        affected = [g for g in self.engine.groups.values()
+                    if g.gid.startswith("dp.s") or g.gid == f"pp.d{d}"]
+        lanes0 = {ln: self.clock.lane_total(ln)
+                  for ln in ("downtime", "overlap")}
+        run = MigrationRun(self.clock, fault=inject,
+                           label=f"dp_regrow:{d}")
+        run.crash = crash
+        run.set_steps(self._dp_grow_steps(run, rep, d, staff, affected,
+                                          lanes0))
+        self._journal_run_begin(run, "dp_resize", {
+            "direction": "grow", "d": d,
+            "staff": sorted([s, m] for s, m in staff.items()),
+            "gids": [g.gid for g in affected]})
+        self._drive_run(run, rep, {}, affected, set(), lanes0["downtime"])
+        assert staffed <= set(self.engine.grid.values())
+        return rep
+
+    def maybe_regrow(self) -> List[MigrationReport]:
+        """Re-grow retired chains while capacity allows, oldest first."""
+        out: List[MigrationReport] = []
+        while self.engine.hosted:
+            rep = self.dp_regrow()
+            if rep is None:
+                break
+            out.append(rep)
+        return out
+
+    def _dp_grow_steps(self, run: MigrationRun, rep: MigrationReport,
+                       d: int, staff: Dict[int, int],
+                       affected: List[CommGroup],
+                       lanes0: Dict[str, float]) -> List[Step]:
+        pp = self.engine.pp
+
+        def plan():
+            todo = [g for g in affected
+                    if f"switch:{g.gid}" not in run.done]
+            for g in todo:
+                if g.gid == f"pp.d{d}":
+                    ins = [staff[s] for s in range(pp)]
+                    p = compute_dp_resize_plan(g, insert=ins, index=0)
+                else:
+                    s = int(g.gid.split("dp.s")[-1])
+                    p = compute_dp_resize_plan(
+                        g, insert=[staff[s]],
+                        index=min(d, len(g.members)))
+                g.pending_plan = p
+                g.pending_members = p.new_members
+                g.state = GroupState.READY_TO_SWITCHOUT
+            self.clock.advance(self.cost.dp_resize_plan_s * len(todo),
+                               "dp_resize_plan", lane="overlap")
+
+        def warm(mid, s):
+            def fn():
+                rep.promote_s = max(rep.promote_s,
+                                    standby_mod.promote_standby(
+                                        self.engine, self.cluster[mid], s,
+                                        self.clock, self.cost,
+                                        lane="overlap"))
+            return fn
+
+        def barrier():
+            rep.overlap = self.clock.lane_total("overlap") \
+                - lanes0["overlap"]
+            self.clock.advance(self.cost.iteration_barrier, "drain",
+                               lane="downtime")
+            rep.barrier += self.cost.iteration_barrier
+
+        def xfer():
+            # each host ships its stage state to the machine taking the
+            # rank back — distinct source hosts, so the copies ride
+            # their own compute channels in parallel
+            handles = []
+            for s in range(pp):
+                host = self.engine.hosted[(d, s)]
+                tr = state_sync.regrow_staff(
+                    self.engine, host, staff[s], s, self.clock,
+                    self.cost, charge=False)
+                rep.state_bytes += tr.nbytes
+                rep.state_transfer_s = max(rep.state_transfer_s,
+                                           tr.seconds)
+                handles.append(self.clock.issue_async(
+                    ("compute", host), tr.seconds,
+                    f"regrow_xfer:{host}->{staff[s]}"))
+            for h in handles:
+                self.clock.wait_async(h, lane="downtime")
+
+        def resize():
+            self.engine.dp_restaff(d, staff)
+            self._journal_run_meta(run, staffed=sorted(staff.values()))
+
+        steps = [Step("prepare:all", "prepare", plan,
+                      MigState.DELTA_PREPARED)]
+        warms = [Step(f"warmup:{staff[s]}", "warmup", warm(staff[s], s))
+                 for s in range(pp)]
+        if warms:
+            warms[-1].state_after = MigState.JOINERS_WARMED
+        steps += warms
+        steps.append(Step("barrier", "barrier", barrier,
+                          MigState.SWITCHING))
+        steps.append(Step("xfer", "xfer", xfer))
+        steps.append(Step("resize", "recover", resize))
+        steps += [Step(f"switch:{g.gid}", "switch",
+                       self._switch_step(run, rep, g))
+                  for g in affected]
+        steps.append(Step("commit", "commit", lambda: None,
+                          MigState.COMMITTED))
+        return steps
 
     # ----------------------------------------------------- crash restart
     def restart(self) -> "Controller":
@@ -951,6 +1298,8 @@ class Controller:
         # journal below, not handed over.
         new.imc = self.imc
         new.storage = self.storage
+        new.elastic_pool = self.elastic_pool
+        new.degraded_mode = self.degraded_mode
         new._restore_from_journal(state, lane)
         return new
 
@@ -981,6 +1330,8 @@ class Controller:
             pairs = (r["meta"].get("pairing")
                      or r["params"].get("pairing") or [])
             claimed |= {int(j) for _l, j in pairs}
+            # a dp_resize grow reserves its staffing set, not a pairing
+            claimed |= {int(m) for _s, m in r["params"].get("staff", [])}
         in_grid = set(self.engine.grid.values())
         for m in self.cluster.machines.values():
             if (m.status == NodeStatus.PREPARING
@@ -1045,6 +1396,19 @@ class Controller:
             run.set_steps(self._failure_steps(
                 run, rep, int(params["failed"]), affected, pairing, ctx,
                 params["use_standby"], params["dirty"]))
+        elif op == "dp_resize":
+            if params["direction"] == "shrink":
+                rep = MigrationReport("dp_shrink")
+                chain = {int(s): int(m) for s, m in params["chain"]}
+                known_dead = {int(params["victim"])}
+                run.set_steps(self._dp_shrink_steps(
+                    run, rep, int(params["victim"]), int(params["d_gone"]),
+                    chain, affected, lanes0))
+            else:
+                rep = MigrationReport("dp_regrow")
+                staff = {int(s): int(m) for s, m in params["staff"]}
+                run.set_steps(self._dp_grow_steps(
+                    run, rep, int(params["d"]), staff, affected, lanes0))
         else:
             assert op == "reshard_recovery", f"unknown journaled op {op}"
             rep = MigrationReport("gpu_reshard")

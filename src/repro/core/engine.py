@@ -171,6 +171,16 @@ class PipelineEngine:
         self.param_dtype = jnp.dtype(param_dtype)
         self.grid: Dict[Tuple[int, int], int] = {}
         self._coords: Dict[int, Tuple[int, int]] = {}
+        # Degraded-mode rank hosting (dp_retire/dp_restaff): logical
+        # (d, s) slots whose machine was retired, mapped to the
+        # surviving same-stage DP replica that stands in for them. The
+        # LOGICAL grid shape (dp, mb_size, navg, the bucket reduce)
+        # never changes — DP replicas hold bitwise-identical state, so
+        # a host serves a retired rank with its own payload and the
+        # math stays exactly the reference math; only throughput
+        # degrades (the host runs the stage compute once per hosted
+        # rank) and the physical comm rings shrink.
+        self.hosted: Dict[Tuple[int, int], int] = {}
         self._flat_specs: Dict[int, flatbuf.SegmentedSpec] = {}
         self._state_specs: Dict[int, flatbuf.ByteSpec] = {}
         self._grad_bytes: Dict[int, int] = {}
@@ -209,6 +219,7 @@ class PipelineEngine:
         # coords_of would silently serve coordinates for evicted mids
         self.grid.clear()
         self._coords.clear()
+        self.hosted.clear()
         full = backbone.init_params(self.cfg, jax.random.PRNGKey(self.seed),
                                     tp=1, dtype=jnp.float32)
         it = iter(machine_ids)
@@ -246,8 +257,17 @@ class PipelineEngine:
         for g in self.groups.values():
             g.establish_all()
 
+    def _mid(self, d: int, s: int) -> int:
+        """Physical machine serving logical rank (d, s): the grid entry,
+        or — for a retired slot — its same-stage host. Explicit `in`
+        check because machine id 0 is falsy."""
+        key = (d, s)
+        if key in self.grid:
+            return self.grid[key]
+        return self.hosted[key]
+
     def machine(self, d: int, s: int) -> Machine:
-        return self.cluster[self.grid[(d, s)]]
+        return self.cluster[self._mid(d, s)]
 
     def coords_of(self, mid: int) -> Tuple[int, int]:
         """O(1) reverse lookup, kept in sync by setup/swap_machine."""
@@ -482,11 +502,20 @@ class PipelineEngine:
         comm.reset_counters()
         losses = []
         grads_acc: Dict[Tuple[int, int], Any] = {}
-        slow = max(m.straggle_factor
-                   for m in (self.cluster[mid] for mid in self.grid.values()))
-        # compute-time charge (simulated cluster time, straggler-aware)
+        # compute-time charge (simulated cluster time): the critical
+        # machine is the slowest of (straggle factor x hosted-rank
+        # load) — a degraded-mode host runs its stage compute once per
+        # rank it serves, so hosting shows up as throughput, never as
+        # different math
+        load: Dict[int, int] = {}
+        for d in range(self.dp):
+            for s in range(self.pp):
+                mid = self._mid(d, s)
+                load[mid] = load.get(mid, 0) + 1
+        slow = max(self.cluster[mid].straggle_factor * n
+                   for mid, n in load.items())
         t_comp = 3 * self._stage_flops * self.nmb * slow / \
-            (FLOPS_PER_GPU * self.cluster[self.grid[(0, 0)]].gpus)
+            (FLOPS_PER_GPU * self.cluster[self._mid(0, 0)].gpus)
         overlap = self.use_flat_buffers
         if not overlap:
             self.clock.advance(t_comp, "compute", lane=lane)
@@ -501,14 +530,14 @@ class PipelineEngine:
                     fns = self.compile_role(s).fns
                     if s > 0:
                         x = comm.p2p_recv(stage_role_key(s), "act",
-                                          src=self.grid[(d, s - 1)],
+                                          src=self._mid(d, s - 1),
                                           dst=m.mid, value=x,
                                           overlap=overlap)
                     acts[(s, mb)] = x
                     if s < self.pp - 1:
                         y = fns["fwd"](self._stage_params(m), x)
                         comm.p2p_send(stage_role_key(s), "act", m.mid,
-                                      self.grid[(d, s + 1)], y)
+                                      self._mid(d, s + 1), y)
                         x = y
                 # backward
                 dy = None
@@ -521,14 +550,14 @@ class PipelineEngine:
                         losses.append(float(loss))
                     else:
                         dy = comm.p2p_recv(stage_role_key(s), "grad",
-                                           src=self.grid[(d, s + 1)],
+                                           src=self._mid(d, s + 1),
                                            dst=m.mid, value=dy,
                                            overlap=overlap)
                         dp_, dx = fns["mid_bwd"](self._stage_params(m),
                                                  acts[(s, mb)], dy)
                     if s > 0:
                         comm.p2p_send(stage_role_key(s), "grad", m.mid,
-                                      self.grid[(d, s - 1)], dx)
+                                      self._mid(d, s - 1), dx)
                         dy = dx
                     key = (d, s)
                     grads_acc[key] = dp_ if key not in grads_acc else \
@@ -572,10 +601,15 @@ class PipelineEngine:
             self.clock.advance(t_bwd, f"compute:bwd_tail:{s}", lane=lane)
             stacked = [grads_acc[(d, s)] for d in range(self.dp)]
             segs = self.bucket_reduce_fn(s)(*stacked)
+            # the ring cost scales with the PHYSICAL participant count:
+            # hosted ranks contribute no extra ring hop (their grads
+            # already live on the host), which is the comm upside of a
+            # degraded-mode shrink
+            phys = len({self._mid(d, s) for d in range(self.dp)})
             handles[s] = [
                 self.comm.all_reduce_async(stage_role_key(s),
                                            "gradbucket", [seg],
-                                           participants=self.dp)
+                                           participants=phys)
                 for seg in segs]
         for s in reversed(range(self.pp)):       # wait in issue order
             fns = self.compile_role(s).fns
@@ -834,11 +868,78 @@ class PipelineEngine:
         self.grid[(d, s)] = joiner
         self._coords.pop(leaver, None)
         self._coords[joiner] = (d, s)
+        for k, h in list(self.hosted.items()):
+            if h == leaver:                 # leaver was hosting: the
+                self.hosted[k] = joiner     # joiner inherits the rank
         jm, lm = self.cluster[joiner], self.cluster[leaver]
         jm.role, lm.role = lm.role, None
         jm.status = NodeStatus.TRAINING
         if lm.status != NodeStatus.DEAD:
             lm.status = NodeStatus.IDLE
+
+    def dp_retire(self, d_gone: int) -> List[int]:
+        """Degraded-mode shrink: retire DP chain `d_gone` from the
+        physical grid. Every (d_gone, s) logical rank is re-hosted by a
+        surviving same-stage replica — no state moves, because DP
+        replicas hold bitwise-identical stage state after every update;
+        the host only allocates a second gradient bucket for the rank
+        it now serves. The chain's still-alive machines are released to
+        IDLE (they become the spares that absorb the rest of the storm)
+        and returned."""
+        assert 0 <= d_gone < self.dp, d_gone
+        freed: List[int] = []
+        for s in range(self.pp):
+            host = None
+            for d in range(self.dp):
+                if d != d_gone and (d, s) in self.grid:
+                    host = self.grid[(d, s)]
+                    break
+            assert host is not None, f"no surviving replica for stage {s}"
+            mid = self.grid.pop((d_gone, s), None)
+            self.hosted[(d_gone, s)] = host
+            hm = self.cluster[host]
+            hm.device.alloc(self.grad_buffer_bytes(s),
+                            f"hosted_grad:d{d_gone}", self.clock.now)
+            if mid is not None:
+                self._coords.pop(mid, None)
+                m = self.cluster[mid]
+                # ranks the retiring machine was itself hosting move to
+                # the new host with it, bucket and all
+                for k, h in list(self.hosted.items()):
+                    if h == mid and k != (d_gone, s):
+                        self.hosted[k] = host
+                        hm.device.alloc(self.grad_buffer_bytes(s),
+                                        f"hosted_grad:d{k[0]}",
+                                        self.clock.now)
+                        m.device.free(f"hosted_grad:d{k[0]}",
+                                      self.clock.now)
+                m.role = None
+                if m.status != NodeStatus.DEAD:
+                    m.status = NodeStatus.IDLE
+                    m.device.free("grad_buffer", self.clock.now)
+                    # stale the moment training resumes without it; a
+                    # later re-use as a joiner re-allocs the tag fresh
+                    m.device.free("train_state", self.clock.now)
+                    freed.append(mid)
+        return freed
+
+    def dp_restaff(self, d: int, stage_mids: Dict[int, int]) -> None:
+        """Re-grow a retired DP chain: staff `d` with one machine per
+        stage, clearing the hosted overlay and the hosts' extra
+        gradient buckets. Callers ship each new machine a bitwise copy
+        of its DP peer's state (state_sync.regrow_staff) before
+        training resumes, so parity with the uninterrupted reference
+        holds by construction."""
+        for s in range(self.pp):
+            host = self.hosted.pop((d, s))
+            self.cluster[host].device.free(f"hosted_grad:d{d}",
+                                           self.clock.now)
+            mid = stage_mids[s]
+            self.grid[(d, s)] = mid
+            self._coords[mid] = (d, s)
+            m = self.cluster[mid]
+            m.status = NodeStatus.TRAINING
+            m.role = Role(d, s, self.pp)
 
     def state_bytes(self, mid: int) -> int:
         payload = self.cluster[mid].payload

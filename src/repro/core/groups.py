@@ -73,7 +73,12 @@ class CommGroup:
 
     def validate_rings(self) -> bool:
         """Every channel's connections must form one Hamiltonian cycle
-        over the current membership."""
+        over the current membership. Groups shrunk below two members
+        (degraded-mode dp_resize) carry no rings at all — they are valid
+        iff they hold zero connections, mirroring build_groups skipping
+        singleton groups at bootstrap."""
+        if len(self.members) < 2:
+            return not self.connections
         members = set(self.members)
         for ch in range(self.channels):
             nxt = {c.src: c.dst for c in self.connections.values()
@@ -94,16 +99,22 @@ class CommGroup:
 @dataclass
 class DeltaPlan:
     """Minimal channel-level reconfiguration for a membership change
-    (kind="replace") or an intra-machine re-shard (kind="reshard":
+    (kind="replace"), an intra-machine re-shard (kind="reshard":
     membership unchanged, the victim's channel endpoints re-bind to its
-    surviving devices, so add == drop == the victim-adjacent edges)."""
+    surviving devices, so add == drop == the victim-adjacent edges), or
+    a membership-cardinality change (kind="dp_resize": degraded-mode
+    DP shrink removes members, re-grow inserts them; the ring contracts
+    or expands around the splice point). Cardinality changes are not
+    invertible from `replace`, so dp_resize plans carry `old_members`
+    and revert_delta restores membership from it."""
     group: str
     replace: Dict[int, int]            # leaver -> joiner
     add: List[Connection] = field(default_factory=list)
     drop: List[Connection] = field(default_factory=list)
     inherited: int = 0                 # untouched connections
     new_members: List[int] = field(default_factory=list)
-    kind: str = "replace"              # replace | reshard
+    kind: str = "replace"              # replace | reshard | dp_resize
+    old_members: List[int] = field(default_factory=list)
 
     @property
     def delta_fraction(self) -> float:
@@ -148,6 +159,40 @@ def compute_reshard_plan(group: CommGroup, mid: int) -> DeltaPlan:
                      new_members=list(group.members), kind="reshard")
 
 
+def compute_dp_resize_plan(group: CommGroup,
+                           remove: Sequence[int] = (),
+                           insert: Sequence[int] = (),
+                           index: int = 0) -> DeltaPlan:
+    """Membership-cardinality delta for degraded-mode DP resize.
+
+    Shrink (`remove`): the named members leave and each channel ring
+    contracts around the gap — the leavers' neighbours connect
+    directly. Grow (`insert`): the named members splice into the ring
+    at `index`. Both directions are computed as a ring diff, so only
+    splice-adjacent connections change and everything else is
+    inherited; a shrink followed by the matching grow restores the
+    original ring exactly (the plan is self-inverse under
+    revert_delta via `old_members`)."""
+    assert not (remove and insert), "resize is shrink XOR grow"
+    old_members = list(group.members)
+    if remove:
+        gone = set(remove)
+        assert gone <= set(old_members), (group.gid, remove)
+        new_members = [m for m in old_members if m not in gone]
+    else:
+        assert insert, "empty resize"
+        assert not (set(insert) & set(old_members)), (group.gid, insert)
+        i = min(max(index, 0), len(old_members))
+        new_members = old_members[:i] + list(insert) + old_members[i:]
+    old_conns = {c.key(): c for c in group.ring_connections(old_members)}
+    new_conns = {c.key(): c for c in group.ring_connections(new_members)}
+    add = [c for k, c in new_conns.items() if k not in old_conns]
+    drop = [c for k, c in old_conns.items() if k not in new_conns]
+    inherited = len(new_conns) - len(add)
+    return DeltaPlan(group.gid, {}, add, drop, inherited, new_members,
+                     kind="dp_resize", old_members=old_members)
+
+
 def apply_delta(group: CommGroup, plan: DeltaPlan) -> None:
     for c in plan.drop:
         group.connections.pop(c.key(), None)
@@ -168,8 +213,12 @@ def revert_delta(group: CommGroup, plan: DeltaPlan) -> None:
         group.connections.pop(c.key(), None)
     for c in plan.drop:
         group.connections[c.key()] = c
-    inverse = {j: l for l, j in plan.replace.items()}
-    group.members = [inverse.get(m, m) for m in plan.new_members]
+    if plan.kind == "dp_resize":
+        # cardinality changes can't be inverted from `replace`
+        group.members = list(plan.old_members)
+    else:
+        inverse = {j: l for l, j in plan.replace.items()}
+        group.members = [inverse.get(m, m) for m in plan.new_members]
     group.state = GroupState.READY_TO_SWITCHOUT
     group.pending_plan = plan
     group.pending_members = list(plan.new_members)
@@ -197,6 +246,7 @@ def plan_to_dict(plan: DeltaPlan) -> dict:
         "inherited": plan.inherited,
         "new_members": list(plan.new_members),
         "kind": plan.kind,
+        "old_members": list(plan.old_members),
     }
 
 
@@ -205,7 +255,8 @@ def plan_from_dict(d: dict) -> DeltaPlan:
         d["group"], {int(l): int(j) for l, j in d["replace"]},
         [connection_from_list(c) for c in d["add"]],
         [connection_from_list(c) for c in d["drop"]],
-        int(d["inherited"]), list(d["new_members"]), d["kind"])
+        int(d["inherited"]), list(d["new_members"]), d["kind"],
+        list(d.get("old_members", [])))
 
 
 def group_to_dict(g: CommGroup) -> dict:

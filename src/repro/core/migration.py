@@ -90,6 +90,30 @@ class MidSwitchFault(Exception):
 
 
 @dataclass
+class DeadlinePoint:
+    """Arms a wall-clock deadline on a run: an advance-notice
+    preemption revokes `victims` at `deadline` seconds of SimClock
+    time, whatever step the run happens to be on. Unlike a FaultPoint
+    it is time-triggered, not step-triggered — the run checks it
+    before every step and raises NoticeExpired once (`fired` latches)
+    if the clock has passed the deadline. `now` is a callable so the
+    run reads the live clock, not a snapshot."""
+    deadline: float
+    now: Callable[[], float]
+    victims: List[int] = field(default_factory=list)
+    fired: bool = False
+
+
+class NoticeExpired(MidSwitchFault):
+    """The preemption notice ran out mid-drain: the leaver is revoked
+    for real before the proactive migration finished. Subclassing
+    MidSwitchFault routes it through the standard mid-switch recovery —
+    if the state ship already completed the loss is benign (the pair
+    dissolves cleanly), otherwise the leaver is recovered through the
+    unexpected-failure path."""
+
+
+@dataclass
 class CrashPoint:
     """Arms a *controller* crash at the `index`-th step of `kind`: the
     run raises ControllerCrash immediately before that step executes
@@ -119,6 +143,7 @@ class MigrationRun:
         self.clock = clock
         self.fault = fault
         self.crash: Optional[CrashPoint] = None
+        self.deadline: Optional[DeadlinePoint] = None
         self.label = label
         # ControlJournal hook: called as observer(event, data) after
         # every durable transition (step done, invalidate, revert,
@@ -188,6 +213,16 @@ class MigrationRun:
                 c.fired = True
                 self._log(f"crash@{st.name}")
                 raise ControllerCrash(st.name)
+            d = self.deadline
+            if (d is not None and not d.fired and d.now() >= d.deadline):
+                # the advance notice ran out: the preemption lands now,
+                # mid-drain, and the run absorbs it like any other
+                # mid-switch fault (latched — recovery resumes the run
+                # without re-firing)
+                d.fired = True
+                self.state = MigState.ABORTED
+                self._log(f"deadline@{st.name}", victims=list(d.victims))
+                raise NoticeExpired(st.name, d.victims)
             f = self.fault
             if (f is not None and not f.fired and f.kind == st.kind
                     and f.index == i):

@@ -133,11 +133,45 @@ def live_dp_peer(engine, mid: int) -> Optional[int]:
     for d2 in range(engine.dp):
         if d2 == d:
             continue
-        peer = engine.grid[(d2, s)]
+        # retired slots (degraded-mode shrink) have no grid entry;
+        # explicit None check — machine id 0 is falsy
+        peer = engine.grid.get((d2, s))
+        if peer is None or peer == mid:
+            continue
         pm = engine.cluster[peer]
         if pm.alive and "step" in pm.payload:
             return peer
     return None
+
+
+def regrow_staff(engine, host: int, joiner: int, stage: int,
+                 clock: SimClock, cost: CostModel = DEFAULT,
+                 lane: str = "downtime",
+                 charge: bool = True) -> TransferReport:
+    """Degraded-mode re-grow staffing: the re-staffed rank's state is a
+    bitwise copy of its surviving DP replica (the host that served the
+    rank while it was retired), shipped as one packed flat buffer over
+    RDMA. Unlike leaver_to_joiner the host is NOT leaving — it keeps
+    its own buffers and training role — so the copy occupies the host's
+    compute channel and stages in the joiner's pre-switch headroom.
+    With charge=False the caller issues/waits the (parallel, per-host)
+    time itself via the returned seconds."""
+    buf, step = engine.get_state_flat(host)
+    nbytes = buf.nbytes
+    jm = engine.cluster[joiner]
+    t = cost.transfer(nbytes, cost.bw_state_transfer, cost.rtt_tcp)
+    if charge:
+        h = clock.issue_async(("compute", host), t,
+                              f"regrow_xfer:{host}->{joiner}")
+        clock.wait_async(h, lane=lane)
+    engine.set_state_flat(joiner, stage, buf, step)
+    jm.device.alloc(nbytes, "train_state", clock.now)
+    if jm.device.tagged("grad_buffer") == 0:
+        jm.device.alloc(engine.grad_buffer_bytes(stage), "grad_buffer",
+                        clock.now)
+    packing = ("flat-memcpy" if getattr(engine, "use_flat_buffers", False)
+               else "per-leaf-pack")
+    return TransferReport(nbytes, t, "dp_peer", 0.0, packing)
 
 
 def recover_state(engine, failed: int, joiner: int,

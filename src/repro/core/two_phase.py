@@ -182,6 +182,38 @@ def ccl_reshard_switchover(group: CommGroup, cluster: Cluster,
     return rep
 
 
+def ccl_resize_switchover(group: CommGroup, cluster: Cluster,
+                          clock: SimClock, cost: CostModel = DEFAULT,
+                          lane: str = "downtime") -> PhaseReport:
+    """Phase 2 of a degraded-mode DP resize: contract (shrink) or
+    expand (grow) each channel ring around the splice point. Dropped
+    QPs to a dead leaver cost nothing (teardown is local); only the
+    splice-adjacent re-establishments pay verbs work, machines in
+    parallel — so a shrink is near-free and a grow costs the same as a
+    joiner splice. No state moves here: DP replicas hold
+    bitwise-identical stage state, the engine's rank-hosting overlay
+    (dp_retire / dp_restaff) handles the payload side."""
+    assert group.state in (GroupState.READY_TO_SWITCHOUT,
+                           GroupState.PREPARING), group.state
+    plan = group.pending_plan
+    assert plan is not None and plan.kind == "dp_resize", plan
+    rep = PhaseReport(group.gid)
+    todo_add = [c for c in plan.add if c.key() not in group.connections]
+    with clock.parallel(f"resize2:{group.gid}", lane=lane) as p:
+        per_machine: Dict[int, int] = {}
+        for c in todo_add:
+            per_machine[c.src] = per_machine.get(c.src, 0) + 1
+            per_machine[c.dst] = per_machine.get(c.dst, 0) + 1
+        for mid, n in per_machine.items():
+            p.track(mid, cost.qp_setup * n)
+    apply_delta(group, plan)
+    rep.phase2_time = clock.phases[-1].duration
+    rep.qps_added = len(todo_add)
+    rep.qps_dropped = len(plan.drop)
+    rep.qps_inherited = plan.inherited
+    return rep
+
+
 def ccl_revert_switchover(group: CommGroup, plan: DeltaPlan,
                           cluster: Cluster, clock: SimClock,
                           cost: CostModel = DEFAULT,

@@ -97,13 +97,29 @@ def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
 
 
 def booleans() -> SearchStrategy:
-    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+    # False is the canonical minimal boolean (real-hypothesis order)
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()",
+                          lambda v: [False] if v else [])
 
 
 def sampled_from(elements: Sequence) -> SearchStrategy:
     elements = list(elements)
+
+    def shrink(v):
+        """Earlier elements are simpler (real-hypothesis convention):
+        propose the first element, the midpoint toward it, and the
+        immediate predecessor of the failing value."""
+        try:
+            i = elements.index(v)
+        except ValueError:
+            return []
+        out = []
+        for j in (0, i // 2, i - 1):
+            if 0 <= j < i and elements[j] not in out:
+                out.append(elements[j])
+        return out
     return SearchStrategy(lambda rng: rng.choice(elements),
-                          f"sampled_from({elements!r})")
+                          f"sampled_from({elements!r})", shrink)
 
 
 def _seq_shrinks(v: Sequence, min_size: int, rebuild: Callable):
@@ -206,8 +222,30 @@ def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
             out[keys.draw(rng)] = values.draw(rng)
             attempts += 1
         return out
+
+    def shrink(v):
+        """Drop entries toward min_size (deterministic key order so
+        shrink paths are reproducible), then shrink one value in place
+        via the value strategy."""
+        out = []
+        ks = sorted(v, key=repr)
+        n = len(ks)
+        if n > min_size:
+            if min_size == 0:
+                out.append({})
+            half = n // 2
+            if min_size <= half < n and half > 0:
+                out.append({k: v[k] for k in ks[:half]})
+            if n - 1 >= min_size and n > 1:
+                out.append({k: v[k] for k in ks[1:]})
+                out.append({k: v[k] for k in ks[:-1]})
+        for k in ks:
+            for cand in values.shrink(v[k]):
+                out.append({**v, k: cand})
+                break
+        return out
     return SearchStrategy(
-        draw, f"dictionaries({keys.label},{values.label})")
+        draw, f"dictionaries({keys.label},{values.label})", shrink)
 
 
 def permutations(values: Sequence) -> SearchStrategy:
@@ -217,7 +255,24 @@ def permutations(values: Sequence) -> SearchStrategy:
         out = list(values)
         rng.shuffle(out)
         return out
-    return SearchStrategy(draw, "permutations")
+
+    def shrink(v):
+        """Shrink toward the original ordering (the identity
+        permutation is minimal): propose the original order outright,
+        then single transpositions that move the first out-of-place
+        element home — every candidate is itself a permutation."""
+        if list(v) == values:
+            return []
+        out = [list(values)]
+        for i, want in enumerate(values):
+            if v[i] != want:
+                j = v.index(want)
+                cand = list(v)
+                cand[i], cand[j] = cand[j], cand[i]
+                out.append(cand)
+                break
+        return out
+    return SearchStrategy(draw, "permutations", shrink)
 
 
 def just(value) -> SearchStrategy:

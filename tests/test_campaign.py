@@ -16,13 +16,14 @@ from hypothesis import strategies as st
 from repro.core import campaign
 
 KINDS = {"expected", "failure", "gpu_degrade", "straggler", "rebalance",
-         "standby_loss", "controller_crash"}
+         "standby_loss", "controller_crash", "notice_drain",
+         "churn_storm"}
 TIMINGS = {"between_iter", "pre_reduce", "post_reduce",
            "during_migration", "during_prepare", "during_warmup",
            "mid_switchover", "mid_recovery",
            "concurrent_second_failure", "cascade"}
 RECOVERIES = {"migration", "standby", "reshard", "ckpt_restart",
-              "full_reinit", "replace", "replay"}
+              "full_reinit", "replace", "replay", "degraded"}
 VICTIM_TOKENS = {"joiner", "leaver", "standby"}
 
 
