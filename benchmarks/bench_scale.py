@@ -1,0 +1,385 @@
+"""BENCH_scale: paper-scale figures driven by the REAL Controller.
+
+Every row here comes from `campaign.run_scenario` on a sim-exec
+(`SimExecEngine`) cluster — the actual `Controller` / `MigrationRun` /
+`ControlJournal` machinery at up to 1024 GPUs (128 machines, models up
+to yi-34b) — NOT from the `baselines.trainmover_modelled` closed
+forms. The closed-form rows are kept alongside for contrast (they are
+what figs 8/9/16 used before this benchmark existed).
+
+Axes swept:
+  - machines x gpt-10b (fig 8 shape: downtime growth < 10 s from
+    32 -> 1024 GPUs)
+  - model size at fixed 128 GPUs (gpt-2.7b .. yi-34b)
+  - storage bandwidth per fig 17 (TrainMover's standby recovery is
+    insensitive; the checkpoint-restart baseline scales with it)
+  - intra-machine re-shard vs migrate per lost-GPU count at yi-34b,
+    settling the open `CostModel.reshard_min_fraction` question at
+    state sizes where lost-fraction transfer dominates
+  - fleet-size projections (fig 9) and rebalance ETTR (fig 16) from
+    the measured 1024-GPU anchors
+
+Writes BENCH_scale.{json,md} at the repo root. `--smoke` runs one
+128-GPU scenario and writes nothing (the push-CI coverage slice).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import COST, csv_line, emit          # noqa: E402
+from repro.cluster.costmodel import CostModel               # noqa: E402
+from repro.core import baselines, metrics                   # noqa: E402
+from repro.core.campaign import (CampaignCfg, Scenario,     # noqa: E402
+                                 reference_run, run_scenario)
+
+GPUS_PER_MACHINE = 8
+MACHINES_AXIS = (4, 8, 16, 32, 64, 128)          # 32 -> 1024 GPUs
+MODEL_AXIS = ("gpt-2.7b", "gpt-6.7b", "gpt-10b", "gpt-20b", "yi-34b")
+STORAGE_BW_GBS = (0.25, 0.5, 1.0, 2.0)           # fig 17 axis
+
+
+def sim_cfg(machines: int, arch: str = "gpt-10b",
+            standby: int = 2) -> CampaignCfg:
+    """Paper-scale sim-exec campaign shape: pp=4 (pp=2 below 8
+    machines), mb_size=1, short sequences — activation traffic is not
+    what the downtime claims measure, state size is."""
+    pp = 4 if machines >= 8 else 2
+    dp = machines // pp
+    assert dp * pp == machines, (machines, pp)
+    return CampaignCfg(mode="sim", arch=arch, dp=dp, pp=pp,
+                       global_batch=dp * 2, seq_len=512,
+                       micro_batches=2, standby_count=standby,
+                       machines=machines + standby + 3,
+                       device_capacity_gb=8 * 80.0)
+
+
+def _scn(name: str, cfg: CampaignCfg) -> Scenario:
+    """The scenario shapes the scale sweep drives (a slice of the
+    campaign's default matrix, identical params)."""
+    shapes = {
+        "expected": Scenario("expected-first", "expected", "d0s0",
+                             "between_iter", "migration"),
+        "unexpected": Scenario("fail-first-standby", "failure", "d0s0",
+                               "between_iter", "standby"),
+        "no_standby": Scenario("fail-no-standby", "failure", "d0s0",
+                               "between_iter", "ckpt_restart",
+                               {"standby_count": 0, "save_storage": True,
+                                "per_iteration_ckpt": False}),
+        "full_reinit": Scenario("fail-first-full-reinit", "failure",
+                                "d0s0", "between_iter", "full_reinit",
+                                {"standby_count": 0,
+                                 "save_storage": True}),
+        "notice_drain": Scenario("notice-drain-long", "notice_drain",
+                                 f"d0s{cfg.pp - 1}", "between_iter",
+                                 "migration", {"notice_s": 120.0}),
+    }
+    return shapes[name]
+
+
+def measure_point(machines: int, arch: str = "gpt-10b",
+                  cost: CostModel = COST,
+                  scenarios=("expected", "unexpected", "no_standby"),
+                  ) -> Dict[str, object]:
+    """One scale point: reference run + the named scenario slice on a
+    sim-exec campaign, downtimes from the SimClock lane ledger."""
+    cfg = sim_cfg(machines, arch)
+    t0 = time.time()
+    ref = reference_run(cfg, cost)
+    out: Dict[str, object] = {"machines": machines,
+                              "gpus": machines * GPUS_PER_MACHINE,
+                              "model": arch}
+    for name in scenarios:
+        r = run_scenario(_scn(name, cfg), cfg, ref, cost)
+        assert r.loss_parity, (arch, machines, name)
+        out[f"{name}_s"] = round(r.downtime_s, 3)
+        if name == "expected":
+            out["expected_overlap_s"] = round(r.overlap_s, 3)
+    out["wall_s"] = round(time.time() - t0, 1)
+    return out
+
+
+# measured machines-axis anchors, cached so fig08/fig09/fig16 reuse
+# one sweep when driven through benchmarks.run
+_ANCHORS: Dict[int, Dict[str, object]] = {}
+
+
+def scale_anchors(cost: CostModel = COST) -> Dict[int, Dict[str, object]]:
+    """{gpus: measured point} over MACHINES_AXIS at gpt-10b."""
+    if not _ANCHORS:
+        for m in MACHINES_AXIS:
+            pt = measure_point(m, "gpt-10b", cost)
+            _ANCHORS[int(pt["gpus"])] = pt
+    return _ANCHORS
+
+
+# ------------------------------------------------------------- sweeps
+def fig8_scale(cost: CostModel = COST) -> List[dict]:
+    """Fig 8 shape with real-controller rows: measured sim-exec
+    downtime beside the closed-form model it replaces."""
+    rows = []
+    for gpus, pt in sorted(scale_anchors(cost).items()):
+        tm_e = baselines.trainmover_modelled(10e9, gpus)
+        tm_u = baselines.trainmover_modelled(10e9, gpus, unexpected=True)
+        rows.append({
+            "gpus": gpus, "model": pt["model"],
+            "system": "trainmover(sim-exec)",
+            "expected_s": pt["expected_s"],
+            "unexpected_s": pt["unexpected_s"],
+            "no_standby_s": pt["no_standby_s"],
+            "modelled_expected_s": round(tm_e.downtime, 2),
+            "modelled_unexpected_s": round(tm_u.downtime, 2),
+            "wall_s": pt["wall_s"]})
+    return rows
+
+
+def model_axis(cost: CostModel = COST, machines: int = 16) -> List[dict]:
+    """Model-size axis at fixed GPU count: state bytes grow ~10x
+    gpt-2.7b -> yi-34b while standby-path downtime stays off the
+    critical lane."""
+    rows = []
+    for arch in MODEL_AXIS:
+        pt = measure_point(machines, arch, cost)
+        rows.append(pt)
+    return rows
+
+
+def bandwidth_axis(cost: CostModel = COST, machines: int = 4,
+                   arch: str = "gpt-20b") -> List[dict]:
+    """Fig 17: storage-bandwidth sensitivity at 32 GPUs (the paper's
+    fig-17 scale — per-GPU state is largest there, so ckpt_load is a
+    visible slice of the restart window). The standby path never
+    touches remote storage; the checkpoint-restart baseline pays
+    model_bytes/gpu / bw on every restore."""
+    rows = []
+    for bw in STORAGE_BW_GBS:
+        c = dataclasses.replace(cost, bw_storage_per_gpu=bw * 1e9)
+        pt = measure_point(machines, arch, c,
+                           scenarios=("unexpected", "full_reinit"))
+        rows.append({"storage_gb_s": bw, "gpus": pt["gpus"],
+                     "model": arch,
+                     "trainmover_s": pt["unexpected_s"],
+                     "ckpt_restart_s": pt["full_reinit_s"],
+                     "wall_s": pt["wall_s"]})
+    return rows
+
+
+def reshard_settlement(cost: CostModel = COST,
+                       machines: int = 8) -> dict:
+    """Settle `reshard_min_fraction` at yi-34b state sizes: per lost-
+    GPU count, measure in-place re-shard (lost slices re-fetch from
+    the DP peer) vs migrate-away downtime through the real
+    controller, and report the smallest surviving fraction at which
+    re-shard still wins."""
+    cfg = sim_cfg(machines, "yi-34b")
+    ref = reference_run(cfg, cost)
+    rows = []
+    for lose in range(1, GPUS_PER_MACHINE):
+        surviving = (GPUS_PER_MACHINE - lose) / GPUS_PER_MACHINE
+        rs = run_scenario(
+            Scenario(f"gpu-reshard-{lose}", "gpu_degrade", "d0s0",
+                     "between_iter", "reshard", {"lose_gpus": lose}),
+            cfg, ref, cost)
+        mg = run_scenario(
+            Scenario(f"gpu-migrate-{lose}", "gpu_degrade", "d0s0",
+                     "between_iter", "migration", {"lose_gpus": lose}),
+            cfg, ref, cost)
+        rows.append({"lose_gpus": lose,
+                     "surviving_fraction": surviving,
+                     "reshard_s": round(rs.downtime_s, 3),
+                     "migrate_s": round(mg.downtime_s, 3),
+                     "winner": ("reshard"
+                                if rs.downtime_s <= mg.downtime_s
+                                else "migrate")})
+    winning = [r["surviving_fraction"] for r in rows
+               if r["winner"] == "reshard"]
+    settled = min(winning) if winning else 1.0
+    return {"model": "yi-34b", "gpus": machines * GPUS_PER_MACHINE,
+            "rows": rows, "settled_min_fraction": settled,
+            "current_default": cost.reshard_min_fraction}
+
+
+def fig9_fleet(cost: CostModel = COST) -> List[dict]:
+    """Fig 9 with measured 1024-GPU anchors: wasted GPU-hours per week
+    across fleet sizes, MTTF-driven event rates."""
+    pt = scale_anchors(cost)[1024]
+    tm_e, tm_u = float(pt["expected_s"]), float(pt["unexpected_s"])
+    tm_u_ns = float(pt["no_standby_s"])
+    mg = baselines.megatron_restart(10e9, 8192).downtime
+    rows = []
+    for gpus in (1024, 8192, 16384, 32768, 65536, 131072):
+        pts = [
+            metrics.gpu_hours_wasted_week(
+                gpus, tm_e, tm_u, standby_gpus=8, infra_reschedule_s=0.0,
+                system="trainmover(sim-exec,standby)"),
+            metrics.gpu_hours_wasted_week(
+                gpus, tm_e, tm_u_ns, standby_gpus=0,
+                system="trainmover(sim-exec,no-standby)"),
+            metrics.gpu_hours_wasted_week(gpus, mg, mg, 0,
+                                          system="megatron-lm"),
+        ]
+        rows.extend({"gpus": gpus, "system": p.system,
+                     "gpu_h_wasted_week": round(p.gpu_hours_week, 0),
+                     "events_week": round(p.events_week, 1)}
+                    for p in pts)
+    return rows
+
+
+def fig16_ettr(cost: CostModel = COST) -> List[dict]:
+    """Fig 16 (top) with measured downtimes: ETTR under 10-minute
+    rebalancing, 128 -> 1024 GPUs."""
+    anchors = scale_anchors(cost)
+    rows = []
+    for gpus in (128, 256, 512, 1024):
+        tm = float(anchors[gpus]["expected_s"])
+        mg = baselines.megatron_restart(10e9, gpus).downtime
+        rows.append({"gpus": gpus,
+                     "trainmover_simexec": round(
+                         metrics.rebalance_ettr(600.0, tm), 4),
+                     "megatron": round(
+                         metrics.rebalance_ettr(600.0, mg), 4)})
+    return rows
+
+
+# ------------------------------------------------------------ driver
+def _md_table(rows: List[dict]) -> List[str]:
+    keys = list(rows[0].keys())
+    out = ["| " + " | ".join(keys) + " |",
+           "|" + "|".join("---" for _ in keys) + "|"]
+    out += ["| " + " | ".join(str(r.get(k, "")) for k in keys) + " |"
+            for r in rows]
+    return out
+
+
+def write_outputs(payload: dict, json_path: str, md_path: str) -> None:
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    lines = ["# BENCH_scale — real-Controller downtime at paper scale",
+             "", "Every `sim-exec` row drives the actual Controller/"
+             "migration/journal machinery on a tensor-free engine "
+             "(see docs/perf.md, \"Sim-exec mode\")."]
+    for title, key in (("Fig 8 shape: downtime vs GPU scale",
+                        "fig8_scale"),
+                       ("Model-size axis", "model_axis"),
+                       ("Fig 17: storage-bandwidth sensitivity",
+                        "bandwidth_axis"),
+                       ("reshard_min_fraction settlement (yi-34b)",
+                        None),
+                       ("Fig 9: wasted GPU-hours per week", "fig9"),
+                       ("Fig 16: rebalance ETTR", "fig16")):
+        lines += ["", f"## {title}", ""]
+        if key is None:
+            st = payload["reshard_settlement"]
+            lines += _md_table(st["rows"])
+            lines += ["", f"Settled `reshard_min_fraction`: re-shard "
+                          f"wins down to surviving fraction "
+                          f"**{st['settled_min_fraction']}** "
+                          f"(current default "
+                          f"{st['current_default']})."]
+        else:
+            lines += _md_table(payload[key])
+    lines += ["", "## Claims", ""]
+    lines += [f"- {k}: {v}" for k, v in sorted(payload["claims"].items())]
+    with open(md_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def run(smoke: bool = False, write: bool = True) -> dict:
+    if smoke:
+        # push-CI slice: one 128-GPU sim-exec scenario through the
+        # real controller, no files written
+        pt = measure_point(16, "gpt-10b", scenarios=("expected",
+                                                     "unexpected"))
+        assert float(pt["unexpected_s"]) < 30.0, pt
+        emit([pt], "bench_scale --smoke (128-GPU sim-exec)")
+        print(csv_line("bench_scale_smoke_unexpected_us",
+                       float(pt["unexpected_s"]) * 1e6,
+                       f"gpus=128;wall_s={pt['wall_s']}"))
+        return pt
+
+    t0 = time.time()
+    fig8 = fig8_scale()
+    models = model_axis()
+    bw = bandwidth_axis()
+    reshard = reshard_settlement()
+    fig9 = fig9_fleet()
+    fig16 = fig16_ettr()
+
+    by_gpus = {r["gpus"]: r for r in fig8}
+    growth_e = by_gpus[1024]["expected_s"] - by_gpus[32]["expected_s"]
+    growth_u = by_gpus[1024]["unexpected_s"] - by_gpus[32]["unexpected_s"]
+    wall_1024 = float(by_gpus[1024]["wall_s"])
+    tm_bw = [r["trainmover_s"] for r in bw]
+    ck_bw = [r["ckpt_restart_s"] for r in bw]
+    tm_bw_delta = max(tm_bw) - min(tm_bw)
+    ck_bw_delta = max(ck_bw) - min(ck_bw)
+    w64 = {r["system"]: r["gpu_h_wasted_week"] for r in fig9
+           if r["gpus"] == 65536}
+    red_ns = 1 - w64["trainmover(sim-exec,standby)"] \
+        / w64["trainmover(sim-exec,no-standby)"]
+    red_mg = 1 - w64["trainmover(sim-exec,standby)"] / w64["megatron-lm"]
+    claims = {
+        "fig8_downtime_growth_32_to_1024_expected_s": round(growth_e, 3),
+        "fig8_downtime_growth_32_to_1024_unexpected_s": round(growth_u,
+                                                              3),
+        "campaign_1024gpu_wall_s": wall_1024,
+        "fig17_trainmover_bw_delta_s": round(tm_bw_delta, 3),
+        "fig17_ckpt_bw_delta_s": round(ck_bw_delta, 3),
+        "fig9_reduction_vs_no_standby_64k": round(red_ns, 3),
+        "fig9_reduction_vs_megatron_64k": round(red_mg, 3),
+        "fig16_ettr_1024": fig16[-1]["trainmover_simexec"],
+        "reshard_settled_min_fraction":
+            reshard["settled_min_fraction"],
+    }
+    # the paper-shape assertions BENCH_scale exists to pin
+    assert growth_e < 10.0 and growth_u < 10.0, claims
+    assert wall_1024 < 60.0, claims
+    # trainmover flat across 0.25-2 GB/s; checkpoint restart pays
+    # tens of seconds more at the low end (ckpt_load ~ 1/bw)
+    assert claims["fig17_trainmover_bw_delta_s"] < 0.5, claims
+    assert claims["fig17_ckpt_bw_delta_s"] > 20.0, claims
+    assert red_ns > 0.0 and red_mg > 0.5, claims
+    assert claims["fig16_ettr_1024"] >= 0.97, claims
+
+    payload = {"config": {"gpus_per_machine": GPUS_PER_MACHINE,
+                          "machines_axis": list(MACHINES_AXIS),
+                          "model_axis": list(MODEL_AXIS),
+                          "storage_bw_gb_s": list(STORAGE_BW_GBS),
+                          "engine": "sim-exec"},
+               "fig8_scale": fig8, "model_axis": models,
+               "bandwidth_axis": bw, "reshard_settlement": reshard,
+               "fig9": fig9, "fig16": fig16, "claims": claims,
+               "total_wall_s": round(time.time() - t0, 1)}
+    if write:
+        write_outputs(payload,
+                      os.path.join(_ROOT, "BENCH_scale.json"),
+                      os.path.join(_ROOT, "BENCH_scale.md"))
+    emit(fig8, "Fig 8 shape: sim-exec downtime vs scale")
+    emit(models, "Model-size axis")
+    emit(bw, "Fig 17: storage-bandwidth sensitivity")
+    emit(reshard["rows"], "reshard_min_fraction settlement (yi-34b)")
+    emit(fig16, "Fig 16: rebalance ETTR (measured)")
+    print(csv_line("bench_scale_tm_1024_expected_us",
+                   float(by_gpus[1024]["expected_s"]) * 1e6,
+                   f"expected_s={by_gpus[1024]['expected_s']};"
+                   f"unexpected_s={by_gpus[1024]['unexpected_s']};"
+                   f"wall_s={wall_1024}"))
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one 128-GPU sim-exec scenario, no files")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

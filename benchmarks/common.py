@@ -1,11 +1,16 @@
 """Shared helpers for the paper-table benchmarks."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 from typing import Dict, List, Optional
 
-sys.path.insert(0, "src")
+# resolve from this file, not CWD, so benchmarks run from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 from repro.cluster.costmodel import DEFAULT as COST, CostModel
 from repro.cluster.node import Cluster
@@ -19,15 +24,21 @@ from repro.models.registry import count_params
 # analytic parameter counts for the paper's models (cached)
 _PARAMS: Dict[str, float] = {}
 
+# nominal sizes for paper models with no FAMILY config; must stay
+# disjoint from FAMILY so the counted and nominal sources can't drift
+# apart for the same name (pinned by tests/test_bench_common.py)
+_NOMINAL: Dict[str, float] = {"gpt-1t": 1e12}
+
 
 def gpt_params(name: str) -> float:
     if name not in _PARAMS:
         if name in FAMILY:
             _PARAMS[name] = float(count_params(FAMILY[name]))
         else:
-            _PARAMS[name] = {"gpt-medium": 0.35e9, "gpt-2.7b": 2.7e9,
-                             "gpt-20b": 20e9, "gpt-39.1b": 39.1e9,
-                             "gpt-5.12t-moe": 5.12e12}[name]
+            assert not set(_NOMINAL) & set(FAMILY), \
+                "nominal fallback may only carry names absent from " \
+                "FAMILY (counted and nominal sources must not drift)"
+            _PARAMS[name] = _NOMINAL[name]  # KeyError: unknown model
     return _PARAMS[name]
 
 

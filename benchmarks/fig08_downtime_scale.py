@@ -1,43 +1,61 @@
 """Fig. 8: downtime vs GPU scale (32 -> 1024) for expected migrations
 and unexpected failures; TrainMover vs Megatron-LM restart.
 
-Small scales run the REAL-EXEC controller (real state copies, real
-delta switchover, real sandbox compile off the critical path); large
-scales use the closed-form model (paper claim: downtime grows <10 s
-from 32 to 1024 GPUs because only leaver-joiner links change)."""
+The tiny-GPT real-exec controller anchors the small end (real state
+copies, real delta switchover, real sandbox compile off the critical
+path); sim-exec drives the SAME controller at gpt-10b up to 1024 GPUs
+(benchmarks/bench_scale.py); the closed-form model rows remain for
+contrast (paper claim: downtime grows <10 s from 32 to 1024 GPUs
+because only leaver-joiner links change)."""
 from __future__ import annotations
 
+from benchmarks import bench_scale
 from benchmarks.common import COST, build_realexec, csv_line, emit
 from repro.core import baselines
 
 
 def run() -> list:
     rows = []
-    # real-exec at "32-GPU class" (4 machines x 8 GPUs)
+    # real-exec tiny GPT on a 4-machine cluster. Hardware-equivalent
+    # GPU count is 4 machines x 8 = 32, but the model is NOT the
+    # gpt-10b the modelled rows use — label both axes so the rows
+    # can't be conflated.
     ctl = build_realexec(dp=2, pp=2)
     ctl.bootstrap_job(list(range(4)))
     ctl.train(1)
     rep_e = ctl.expected_migration([ctl.engine.grid[(1, 1)]])
     ctl.train(1)
     rep_u = ctl.unexpected_failure(ctl.engine.grid[(0, 1)])
-    rows.append({"gpus": 32, "system": "trainmover(real-exec)",
+    rows.append({"gpus": 32, "model": "tiny-gpt",
+                 "system": "trainmover(real-exec)",
                  "expected_s": round(rep_e.downtime, 2),
                  "unexpected_s": round(rep_u.downtime, 2)})
+
+    # real Controller at scale via sim-exec (cached sweep)
+    for gpus, pt in sorted(bench_scale.scale_anchors(COST).items()):
+        rows.append({"gpus": gpus, "model": pt["model"],
+                     "system": "trainmover(sim-exec)",
+                     "expected_s": pt["expected_s"],
+                     "unexpected_s": pt["unexpected_s"]})
 
     for gpus in (32, 64, 128, 256, 512, 1024):
         tm_e = baselines.trainmover_modelled(10e9, gpus)
         tm_u = baselines.trainmover_modelled(10e9, gpus, unexpected=True)
         mg = baselines.megatron_restart(10e9, gpus)
-        rows.append({"gpus": gpus, "system": "trainmover",
+        rows.append({"gpus": gpus, "model": "gpt-10b",
+                     "system": "trainmover(modelled)",
                      "expected_s": round(tm_e.downtime, 2),
                      "unexpected_s": round(tm_u.downtime, 2)})
-        rows.append({"gpus": gpus, "system": "megatron-lm",
+        rows.append({"gpus": gpus, "model": "gpt-10b",
+                     "system": "megatron-lm",
                      "expected_s": round(mg.downtime, 2),
                      "unexpected_s": round(mg.downtime, 2)})
     emit(rows, "Fig 8: downtime vs scale")
-    tm1k = [r for r in rows if r["system"] == "trainmover"
+    tm1k = [r for r in rows if r["system"] == "trainmover(sim-exec)"
             and r["gpus"] == 1024][0]
-    print(csv_line("fig08_tm_1024_expected", tm1k["expected_s"] * 1e6,
+    print(csv_line("fig08_tm_1024_expected_us",
+                   tm1k["expected_s"] * 1e6,
+                   f"expected_s={tm1k['expected_s']};"
                    f"unexpected_s={tm1k['unexpected_s']}"))
     return rows
 

@@ -1,23 +1,25 @@
 """Fig. 9: projected GPU-hours wasted per week, 1K -> 128K GPUs.
 
 Downtimes held constant from measured anchors (TrainMover: 1024-GPU
-value; Oobleck/Parcae: 32-GPU values, optimistically), MTTF from the
-Meta-calibrated table, 1:8.9 expected:unexpected mix, +2-minute infra
-reschedule for all systems."""
+values MEASURED through the real Controller in sim-exec mode, see
+benchmarks/bench_scale.py; Oobleck/Parcae: modelled 32-GPU values,
+optimistically), MTTF from the Meta-calibrated table, 1:8.9
+expected:unexpected mix, +2-minute infra reschedule for all systems."""
 from __future__ import annotations
 
+from benchmarks import bench_scale
 from benchmarks.common import COST, csv_line, emit
 from repro.core import baselines, metrics
 
 
 def run() -> list:
     model = 10e9
-    # anchor downtimes
-    tm_e = baselines.trainmover_modelled(model, 1024).downtime
-    tm_u = baselines.trainmover_modelled(model, 1024,
-                                         unexpected=True).downtime
-    tm_u_ns = baselines.trainmover_modelled(model, 1024, unexpected=True,
-                                            standby=False).downtime
+    # anchor downtimes: measured 1024-GPU gpt-10b sim-exec campaign
+    # rows replace the trainmover_modelled closed forms
+    pt = bench_scale.scale_anchors(COST)[1024]
+    tm_e = float(pt["expected_s"])
+    tm_u = float(pt["unexpected_s"])
+    tm_u_ns = float(pt["no_standby_s"])
     ob = baselines.reconfig_baseline("oobleck", 6.7e9, 32).downtime
     pc = baselines.reconfig_baseline("parcae", 6.7e9, 32).downtime
     mg = baselines.megatron_restart(model, 8192).downtime

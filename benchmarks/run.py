@@ -4,11 +4,16 @@ readable tables. ``python -m benchmarks.run [--only fig08]``"""
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
 
-sys.path.insert(0, "src")
+# resolve from this file, not CWD, so the harness runs from anywhere
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 MODULES = [
     "iter_throughput",
@@ -16,6 +21,7 @@ MODULES = [
     "churn_goodput",
     "table1_restart",
     "table2_ccl_setup",
+    "bench_scale",         # before the figs: they reuse its anchors
     "fig08_downtime_scale",
     "fig09_gpu_hours",
     "fig10_migration_models",

@@ -61,7 +61,11 @@ class CostModel:
     # machine trains slowed until maintenance) or migrate away whole
     # (expected-migration downtime, full speed after). The auto policy
     # re-shards while surviving/total >= this fraction; campaigns sweep
-    # it to compare the two recoveries' downtime.
+    # it to compare the two recoveries' downtime. Measured (sim-exec,
+    # BENCH_scale.json reshard_settlement): at yi-34b state sizes
+    # re-shard wins down to 1/8 surviving, so 0.5 is deliberately
+    # conservative — it bounds the degraded-training tail, not the
+    # recovery downtime.
     reshard_min_fraction: float = 0.5
 
     # ---- control-plane durability (self-healing controller)

@@ -47,6 +47,7 @@ from repro.core.controller import Controller
 from repro.core.engine import PipelineEngine
 from repro.core.migration import ControllerCrash, CrashPoint, FaultPoint
 from repro.core.sandbox import CommHooks
+from repro.core.simexec import SimExecEngine
 
 LANES = ("downtime", "overlap", "train")
 
@@ -138,8 +139,13 @@ class ScenarioResult:
 
 @dataclass
 class CampaignCfg:
-    """Shared run shape. The model is the CPU-runnable tiny GPT; the
-    matrix, not the model, is what the campaign scales."""
+    """Shared run shape. The default model is the CPU-runnable tiny
+    GPT driven by the real tensor engine; the matrix, not the model, is
+    what the campaign scales. `mode="sim"` swaps in the tensor-free
+    `SimExecEngine` (identical SimClock ledgers, no math — see
+    docs/perf.md "Sim-exec mode"), and `arch` names a registry config
+    (e.g. "gpt-10b", "yi-34b") for paper-scale runs that only sim-exec
+    can carry."""
     dp: int = 2
     pp: int = 2
     layers: int = 4
@@ -156,24 +162,44 @@ class CampaignCfg:
     # deterministic-simulation constant for every measured compile /
     # shadow-exec charge (see PipelineEngine.sim_compile_seconds)
     sim_compile_seconds: float = 0.5
+    # "real" = tensor engine; "sim" = model-free SimExecEngine
+    mode: str = "real"
+    # named registry arch (overrides the tiny-GPT layers/d/heads/vocab
+    # knobs above); None keeps the CPU-runnable tiny GPT
+    arch: Optional[str] = None
+    # cluster size override; None keeps dp*pp + standby + 3 spares
+    machines: Optional[int] = None
+    # per-machine device memory; 16 GiB fits the tiny model, paper-
+    # scale sim runs raise it to the 8x80 GiB a real machine has
+    device_capacity_gb: float = 16.0
 
 
 # ---------------------------------------------------------------- build
 def build_controller(cfg: CampaignCfg, standby_count: int,
                      cost: CostModel = DEFAULT,
                      per_iteration_ckpt: bool = True) -> Controller:
-    arch = tiny_gpt(layers=cfg.layers, d=cfg.d_model, heads=cfg.heads,
-                    vocab=cfg.vocab)
-    n_machines = cfg.dp * cfg.pp + standby_count + 3   # spares for joiners
-    cluster = Cluster(n_machines, device_capacity=16 * 2 ** 30)
+    if cfg.arch is not None:
+        from repro.models.registry import get_config
+        arch = get_config(cfg.arch)
+    else:
+        arch = tiny_gpt(layers=cfg.layers, d=cfg.d_model,
+                        heads=cfg.heads, vocab=cfg.vocab)
+    n_machines = cfg.machines if cfg.machines is not None \
+        else cfg.dp * cfg.pp + standby_count + 3   # spares for joiners
+    assert n_machines >= cfg.dp * cfg.pp + standby_count
+    cluster = Cluster(n_machines,
+                      device_capacity=int(cfg.device_capacity_gb
+                                          * 2 ** 30))
     clock = SimClock()
     comm = CommHooks(clock, cost)
-    eng = PipelineEngine(arch, dp=cfg.dp, pp=cfg.pp,
-                         global_batch=cfg.global_batch,
-                         seq_len=cfg.seq_len, cluster=cluster,
-                         clock=clock, comm=comm, cost=cost,
-                         micro_batches=cfg.micro_batches, seed=cfg.seed,
-                         sim_compile_seconds=cfg.sim_compile_seconds)
+    engine_cls = SimExecEngine if cfg.mode == "sim" else PipelineEngine
+    assert cfg.mode in ("real", "sim"), cfg.mode
+    eng = engine_cls(arch, dp=cfg.dp, pp=cfg.pp,
+                     global_batch=cfg.global_batch,
+                     seq_len=cfg.seq_len, cluster=cluster,
+                     clock=clock, comm=comm, cost=cost,
+                     micro_batches=cfg.micro_batches, seed=cfg.seed,
+                     sim_compile_seconds=cfg.sim_compile_seconds)
     ctl = Controller(eng, cost=cost, standby_count=standby_count,
                      per_iteration_ckpt=per_iteration_ckpt,
                      seed=cfg.seed)

@@ -496,7 +496,14 @@ class PipelineEngine:
         accumulated (the final-microbatch backward wave is charged per
         stage, earlier stages' backward hiding later stages'
         in-flight reductions); waits charge only the exposed
-        remainder, and the iteration barrier settles any leftovers."""
+        remainder, and the iteration barrier settles any leftovers.
+
+        Ledger contract: with sim_compile_seconds set, every clock
+        charge in here (and in shadow/warmup/state transfer) must stay
+        a deterministic function of (config, CostModel, byte sizes) —
+        never of tensor values — because core/simexec.py mirrors the
+        exact charge sequence tensor-free and tests pin the two
+        ledgers bit-for-bit (tests/test_simexec.py)."""
         it = self.step_count if it is None else it
         comm = self.comm
         comm.reset_counters()

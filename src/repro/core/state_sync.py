@@ -6,6 +6,11 @@ ledgers: the leaver repurposes its gradient buffer as the transfer
 channel; the joiner stages the transfer in the headroom left by the
 not-yet-established phase-2 inter connections, and the channel is torn
 down before switchover completes.
+
+Every clock/device charge here derives from byte sizes
+(.nbytes / tree_bytes), never from tensor values — sim-exec
+(core/simexec.py) feeds these paths symbolic zero-storage buffers and
+the real/sim ledger-agreement tests depend on that staying true.
 """
 from __future__ import annotations
 

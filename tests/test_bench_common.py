@@ -1,0 +1,61 @@
+"""Pins for the shared benchmark helpers (benchmarks/common.py)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)
+
+from benchmarks import common  # noqa: E402
+from repro.configs.gpt import FAMILY  # noqa: E402
+from repro.models.registry import count_params  # noqa: E402
+
+
+def test_family_names_always_use_counted_params():
+    """Every FAMILY model resolves through count_params — the nominal
+    fallback table must never shadow a real config (the two sources
+    used to be allowed to drift apart silently)."""
+    for name, cfg in FAMILY.items():
+        assert common.gpt_params(name) == float(count_params(cfg))
+
+
+def test_nominal_fallback_disjoint_from_family():
+    assert not set(common._NOMINAL) & set(FAMILY)
+
+
+def test_nominal_fallback_reachable_and_guarded():
+    for name, val in common._NOMINAL.items():
+        assert common.gpt_params(name) == val
+    with pytest.raises(KeyError):
+        common.gpt_params("gpt-definitely-not-a-model")
+
+
+def test_counted_params_pinned():
+    """Exact pins for the counted source. The counted sizes sit above
+    the name-advertised ones (embeddings + untied head at vocab 50k)
+    — that gap is exactly the silent drift the old hardcoded fallback
+    values hid, so freeze the counted numbers here instead."""
+    for name, exact in (("gpt-medium", 505725952.0),
+                        ("gpt-2.7b", 3613166080.0),
+                        ("gpt-6.7b", 9002291200.0),
+                        ("gpt-10b", 14117006080.0),
+                        ("gpt-20b", 27193792512.0),
+                        ("gpt-39.1b", 52364582912.0),
+                        ("gpt-5.12t-moe", 7461646381056.0)):
+        assert common.gpt_params(name) == exact, name
+
+
+def test_common_imports_from_any_cwd(tmp_path):
+    """The sys.path bootstrap resolves from __file__, not CWD — the
+    old `sys.path.insert(0, "src")` broke every benchmark invoked
+    outside the repo root."""
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import runpy; runpy.run_path("
+         f"{os.path.join(_REPO, 'benchmarks', 'common.py')!r})"],
+        cwd=tmp_path, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr

@@ -1,0 +1,137 @@
+"""Sim-exec vs real-exec agreement: the model-free engine's whole
+claim to validity is that every SimClock charge (and therefore every
+downtime/overlap ledger the campaign reports) is bit-identical to
+real-exec, because with `sim_compile_seconds` set each real charge is
+a deterministic function of (config, CostModel, byte sizes) only.
+See docs/perf.md, "Sim-exec mode"."""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core import campaign
+from repro.core.simexec import SimExecEngine, sym_bytes
+
+TINY = campaign.CampaignCfg()
+SIM = dataclasses.replace(TINY, mode="sim")
+
+# the ledger fields both modes must agree on bitwise; loss values are
+# NOT here — sim carries no tensors, so only per-mode loss *parity*
+# against the same-mode reference is claimed
+KEYS = ("events", "downtime_s", "overlap_s", "train_s",
+        "migrated_bytes", "delta_fraction", "lost_iterations",
+        "recovery_path", "steps", "resumes", "ckpt_fallbacks",
+        "degraded_events", "regrow_events", "loss_parity")
+
+# one representative per recovery family from the reduced matrix
+AGREEMENT_SLICE = ("expected-first", "fail-first-standby",
+                   "fail-first-pre_reduce", "gpu-reshard-first",
+                   "standby-loss")
+
+
+def _scenarios(names):
+    by_name = {sc.name: sc
+               for sc in campaign.reduced_matrix(TINY.dp, TINY.pp)}
+    missing = set(names) - set(by_name)
+    assert not missing, missing
+    return [by_name[n] for n in names]
+
+
+# ----------------------------------------------------- fast: sim-only
+def test_symbolic_buffers_are_zero_storage():
+    b = sym_bytes(1 << 40)            # a terabyte that costs nothing
+    assert b.nbytes == 1 << 40
+    assert b.strides == (0,)
+
+
+def test_sim_engine_requires_flat_and_compile_model():
+    ctl = campaign.build_controller(SIM, standby_count=1)
+    assert isinstance(ctl.engine, SimExecEngine)
+    with pytest.raises(AssertionError):
+        campaign.build_controller(
+            dataclasses.replace(SIM, sim_compile_seconds=None),
+            standby_count=1)
+
+
+def test_sim_bootstrap_and_train_deterministic():
+    """Two sim runs produce identical ledgers, losses, signatures."""
+    lanes = []
+    for _ in range(2):
+        ctl = campaign.build_controller(SIM, standby_count=1)
+        ctl.train(3)
+        eng = ctl.engine
+        lanes.append((ctl.clock.now,
+                      {k: ctl.clock.lane_total(k)
+                       for k in ("train", "downtime", "overlap")},
+                      tuple(eng.losses), eng.epoch_signature()))
+    assert lanes[0] == lanes[1]
+
+
+def test_sim_migration_ledger_sane():
+    """A full expected migration through the real Controller on the
+    sim engine: nonzero overlapped prep, consistent epoch."""
+    ctl = campaign.build_controller(SIM, standby_count=1)
+    ctl.train(1)
+    before = ctl.clock.lane_total("overlap")
+    rep = ctl.expected_migration([ctl.engine.grid[(0, 0)]])
+    assert rep.state_bytes > 0
+    assert ctl.clock.lane_total("overlap") > before
+    sig = set(ctl.engine.epoch_signature().values())
+    assert len(sig) == 1
+
+
+def test_sim_scenario_runs_fast_and_clean():
+    ref = campaign.reference_run(SIM)
+    sc = _scenarios(["fail-no-standby"])[0]
+    r = campaign.run_scenario(sc, SIM, ref)
+    assert r.loss_parity
+    assert r.steps == 1 + SIM.total_iters
+    assert r.migrated_bytes > 0
+
+
+def test_paper_scale_arch_builds():
+    """A named-registry arch on a wider sim cluster: the 1024-GPU
+    campaign path in miniature (8 machines, yi-34b config is too slow
+    for tier-1, gpt-2.7b exercises the same code)."""
+    cfg = dataclasses.replace(
+        SIM, arch="gpt-2.7b", dp=2, pp=4, global_batch=4, seq_len=128,
+        machines=8 + 1 + 3, device_capacity_gb=640.0, total_iters=2)
+    ref = campaign.reference_run(cfg)
+    r = campaign.run_scenario(_scenarios(["expected-first"])[0],
+                              cfg, ref)
+    assert r.loss_parity and r.downtime_s > 0
+
+
+# ------------------------------------ slow: real-vs-sim bitwise ledger
+@pytest.fixture(scope="module")
+def mode_results():
+    out = {}
+    for label, cfg in (("real", TINY), ("sim", SIM)):
+        ref = campaign.reference_run(cfg)
+        out[label] = {sc.name: campaign.run_scenario(sc, cfg, ref)
+                      for sc in _scenarios(AGREEMENT_SLICE)}
+    return out
+
+
+@pytest.mark.slow
+def test_ledger_agreement_real_vs_sim(mode_results):
+    """The tentpole invariant: identical downtime/overlap ledgers,
+    migrated bytes, recovery paths, and step counts in both modes,
+    per scenario, bit-for-bit (no tolerance)."""
+    for name in AGREEMENT_SLICE:
+        real = mode_results["real"][name]
+        sim = mode_results["sim"][name]
+        for k in KEYS:
+            assert getattr(real, k) == getattr(sim, k), (name, k)
+
+
+@pytest.mark.slow
+def test_goodput_agreement_real_vs_sim(mode_results):
+    """Derived goodput ratios agree too (they are lane quotients)."""
+    for name in AGREEMENT_SLICE:
+        real = mode_results["real"][name]
+        sim = mode_results["sim"][name]
+        for k in ("ettr", "sched_goodput", "recovery_goodput"):
+            assert getattr(real, k) == pytest.approx(
+                getattr(sim, k), abs=1e-12), (name, k)
