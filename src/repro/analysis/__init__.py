@@ -1,0 +1,34 @@
+"""Static invariant linter for the resilience contract.
+
+`python -m repro.analysis` runs five AST passes over core/, cluster/
+and train/ and exits non-zero on any violation:
+
+- journal-coverage: durable Controller mutations pair with a journal
+  write in the same function scope (crash adoption depends on it);
+- charge-coverage: transfers thread the SimClock and lanes/channels
+  come from the known universe (no free-riding comm);
+- determinism: no wall clocks, no unseeded RNGs, no unordered-set
+  iteration on charged/journaled paths (sim-exec parity);
+- delta-kinds: every DeltaPlan kind handled on all four dispatch
+  surfaces (a new kind cannot half-land);
+- step-names: journaled step names built only by the `_*_steps`
+  builders from stable identifiers (adoption rebuilds by name).
+
+See docs/invariants.md for the invariant statements and the
+`# repro: allow(<pass>)` pragma contract.
+"""
+from .base import (AnalysisPass, Finding, Module, SEVERITY_ERROR,
+                   SEVERITY_WARNING)
+from .runner import (BASELINE_NAME, BaselineResult, EXIT_CLEAN,
+                     EXIT_FINDINGS, EXIT_STALE_BASELINE, all_passes,
+                     apply_baseline, load_baseline, load_modules,
+                     render_human, render_json, repo_root, run,
+                     run_passes)
+
+__all__ = [
+    "AnalysisPass", "Finding", "Module", "SEVERITY_ERROR",
+    "SEVERITY_WARNING", "BASELINE_NAME", "BaselineResult", "EXIT_CLEAN",
+    "EXIT_FINDINGS", "EXIT_STALE_BASELINE", "all_passes",
+    "apply_baseline", "load_baseline", "load_modules", "render_human",
+    "render_json", "repo_root", "run", "run_passes",
+]

@@ -26,6 +26,11 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+# The lane universe. Static analysis (repro.analysis charge-coverage)
+# and the runtime ledger agree on exactly this set: a typo'd lane would
+# otherwise open a fourth bucket that no report ever reads.
+KNOWN_LANES = frozenset({"train", "downtime", "overlap"})
+
 
 @dataclass
 class PhaseRecord:
@@ -70,6 +75,7 @@ class SimClock:
     def advance(self, seconds: float, name: str = "",
                 lane: str = "train") -> None:
         assert seconds >= 0
+        assert lane in KNOWN_LANES, f"unknown lane {lane!r}"
         self.phases.append(PhaseRecord(name, self.now, seconds, lane))
         self.now += seconds
         self._lane_totals[lane] = self._lane_totals.get(lane, 0.0) + seconds
@@ -147,6 +153,7 @@ class SimClock:
         mid-switch fault injection) still records the partial phase and
         advances the clock by whatever was tracked before the fault, so
         `now` and the lane totals never go inconsistent."""
+        assert lane in KNOWN_LANES, f"unknown lane {lane!r}"
         rec = PhaseRecord(name, self.now, 0.0, lane)
 
         class _P:

@@ -367,6 +367,10 @@ class Controller:
 
         def swap(l):
             def fn():
+                # grid occupancy is journaled at run commit
+                # (_drive_run); a crash between swap and commit
+                # re-runs this step from the adopted run
+                # repro: allow(journal-coverage)
                 self.engine.swap_machine(l, pairing[l])
             return fn
 
@@ -443,15 +447,6 @@ class Controller:
             except MidSwitchFault as fault:
                 self._recover_mid_switch(run, fault, pairing, affected,
                                          xferred)
-                # the replan may have rewritten the pairing, released
-                # standbys and reverted groups: journal the adoption
-                # context so a crash after this point restarts cleanly
-                self._journal_run_meta(
-                    run, pairing=sorted([l, j]
-                                        for l, j in pairing.items()),
-                    xferred=sorted(xferred))
-                self._journal_standbys()
-                self._journal_topology()
         assert run.fault is None or run.fault.fired, \
             f"armed FaultPoint {run.fault} never matched a step"
         rep.downtime = self.clock.lane_total("downtime") - lanes0_dt
@@ -485,6 +480,10 @@ class Controller:
                 r = two_phase.ccl_resize_switchover(
                     g, self.cluster, self.clock, self.cost)
             else:
+                # a new DeltaPlan kind must pick its switchover path
+                # explicitly; the membership-replace splice is NOT a
+                # safe default for plans that change cardinality/layout
+                assert plan.kind == "replace", plan.kind
                 r = two_phase.ccl_switchover(g, self.cluster, self.clock,
                                              self.cost)
             run.record_switch(g, plan)
@@ -690,6 +689,16 @@ class Controller:
         if redo_overlapped and "barrier" in run.done:
             run.invalidate("barrier")
         run.mark_resumed(fault)
+        # the replan may have rewritten the pairing, released standbys
+        # and reverted groups: journal the adoption context so a crash
+        # from here restarts cleanly. Lives HERE (not in the callers)
+        # so every recovery — _drive_run's fault loop and _adopt_run's
+        # synthetic controller-restart fault — persists identically.
+        self._journal_run_meta(
+            run, pairing=sorted([l, j] for l, j in pairing.items()),
+            xferred=sorted(xferred))
+        self._journal_standbys()
+        self._journal_topology()
 
     # --------------------------------------------- unexpected interruption
     def unexpected_failure(self, failed: int,
@@ -836,9 +845,14 @@ class Controller:
                             tree_bytes(hit[1]), self.cost.bw_intra_node))
                 self.clock.advance(rb, "rollback", lane="downtime")
                 rep.rollback_s = rb
+                # epoch journaled at run commit (_drive_run);
+                # adoption replays this step
+                # repro: allow(journal-coverage)
                 self.engine.step_count = step
 
         def swap():
+            # topology journaled at run commit (_drive_run)
+            # repro: allow(journal-coverage)
             self.engine.swap_machine(failed, pairing[failed])
 
         steps = [Step("detect", "detect", detect),
@@ -1313,8 +1327,10 @@ class Controller:
         # standby ledger: journaled machines that still report alive;
         # one that died while the controller was down is simply dropped
         # (the pool replenishes on the next recovery cycle)
+        # repro: allow(journal-coverage) — restoring FROM the journal
         self.standbys = [mid for mid in state["standbys"]
                          if self.cluster[mid].alive]
+        # repro: allow(journal-coverage) — restoring FROM the journal
         self.storage_coords = {
             int(mid): (int(c[0]), int(c[1]))
             for mid, _step, c in state["storage_index"]}
@@ -1419,6 +1435,9 @@ class Controller:
         run.done = set(r["done"])
         run.state = MigState(r["state"])
         for sw in r["switched"]:
+            # replaying run_switch records already in the journal;
+            # re-appending them here would duplicate history
+            # repro: allow(journal-coverage)
             run.record_switch(self.engine.groups[sw["gid"]],
                               plan_from_dict(sw["plan"]))
         # re-wire the observer under the SAME jid: post-adoption
@@ -1442,12 +1461,6 @@ class Controller:
             self._recover_mid_switch(
                 run, MidSwitchFault("controller_restart", dead),
                 pairing, affected, xferred)
-            self._journal_run_meta(
-                run, pairing=sorted([l, j]
-                                    for l, j in pairing.items()),
-                xferred=sorted(xferred))
-            self._journal_standbys()
-            self._journal_topology()
         self._drive_run(run, rep, pairing, affected, xferred,
                         lanes0["downtime"])
 

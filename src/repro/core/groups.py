@@ -217,6 +217,9 @@ def revert_delta(group: CommGroup, plan: DeltaPlan) -> None:
         # cardinality changes can't be inverted from `replace`
         group.members = list(plan.old_members)
     else:
+        # a new kind must choose its inverse explicitly — falling
+        # through to the replace-map inversion would corrupt the rings
+        assert plan.kind in ("replace", "reshard"), plan.kind
         inverse = {j: l for l, j in plan.replace.items()}
         group.members = [inverse.get(m, m) for m in plan.new_members]
     group.state = GroupState.READY_TO_SWITCHOUT

@@ -122,7 +122,7 @@ def ccl_switchover(group: CommGroup, cluster: Cluster, clock: SimClock,
     assert group.state in (GroupState.READY_TO_SWITCHOUT,
                            GroupState.PREPARING), group.state
     plan = group.pending_plan
-    assert plan is not None
+    assert plan is not None and plan.kind == "replace", plan
     rep = PhaseReport(group.gid)
     jset = set(plan.replace.values())
     todo_add = [c for c in plan.add if c.key() not in group.connections]
@@ -137,7 +137,9 @@ def ccl_switchover(group: CommGroup, cluster: Cluster, clock: SimClock,
             p.track(mid, cost.qp_setup * n)
     # device memory: swap-in-place — old QP buffers freed as new ones
     # allocate (paper App. A "reuse mechanism"), net zero per ledger.
-    for mid in set(plan.replace.values()):
+    # Sorted: alloc-event order feeds the device-ledger history, which
+    # the sim-exec parity contract compares bitwise across runs.
+    for mid in sorted(set(plan.replace.values())):
         m = cluster[mid]
         m.device.alloc(0.0, f"qps:{group.gid}", clock.now)
     apply_delta(group, plan)
@@ -248,6 +250,7 @@ def switchover_many(groups: List[CommGroup], cluster: Cluster,
         assert group.state in (GroupState.READY_TO_SWITCHOUT,
                                GroupState.PREPARING), group.state
         plan = group.pending_plan
+        assert plan is not None and plan.kind == "replace", plan
         todo = [c for c in plan.add if c.key() not in group.connections]
         staged.append((group, plan, todo))
         for c in todo:
@@ -262,7 +265,7 @@ def switchover_many(groups: List[CommGroup], cluster: Cluster,
         rep.qps_dropped = len(plan.drop)
         rep.qps_inherited = plan.inherited
         rep.phase2_time = clock.phases[-1].duration
-        for mid in set(plan.replace.values()):
+        for mid in sorted(set(plan.replace.values())):
             cluster[mid].device.alloc(0.0, f"qps:{group.gid}", clock.now)
         apply_delta(group, plan)
         for mid in group.members:

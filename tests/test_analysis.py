@@ -1,0 +1,565 @@
+"""Fixture + machinery tests for the static invariant linter
+(repro.analysis).
+
+Layout:
+- one positive (clean) and one negative (seeded violation) fixture per
+  pass, run through the pass directly on synthetic Modules;
+- pragma and baseline machinery (including the stale-entry failure
+  mode: a fixed finding still listed in the baseline must FAIL with a
+  "remove from baseline" message, not silently re-admit regressions);
+- the real tree must be clean against the EMPTY checked-in baseline;
+- mutation pins for the acceptance criterion: deleting a `_journal_*`
+  call or the `charge=` thread from the real controller source must
+  make the run exit non-zero.
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (Finding, Module, apply_baseline, load_baseline,
+                            load_modules, render_human, render_json,
+                            repo_root, run, run_passes)
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.charge_pass import ChargePass
+from repro.analysis.determinism_pass import DeterminismPass
+from repro.analysis.journal_pass import JournalPass
+from repro.analysis.kinds_pass import KindsPass
+from repro.analysis.steps_pass import StepsPass
+from repro.analysis.runner import (EXIT_CLEAN, EXIT_FINDINGS,
+                                   EXIT_STALE_BASELINE)
+
+pytestmark = pytest.mark.analysis
+
+CONTROLLER_REL = "src/repro/core/controller.py"
+
+
+def mod(src: str, rel: str = CONTROLLER_REL) -> Module:
+    return Module(rel, textwrap.dedent(src))
+
+
+def run_one(p, module: Module):
+    return p.run_project([module])
+
+
+# --------------------------------------------------- journal-coverage
+class TestJournalPass:
+    def test_negative_unjournaled_standby_mutation(self):
+        m = mod("""
+            class Controller:
+                def standby_failure(self, mid):
+                    self.standbys.remove(mid)
+            """)
+        (f,) = run_one(JournalPass(), m)
+        assert f.pass_id == "journal-coverage"
+        assert "_journal_standbys" in f.message
+
+    def test_positive_paired_mutation(self):
+        m = mod("""
+            class Controller:
+                def standby_failure(self, mid):
+                    self.standbys.remove(mid)
+                    self._journal_standbys()
+            """)
+        assert run_one(JournalPass(), m) == []
+
+    def test_nested_scope_is_its_own_scope(self):
+        # journal call in the OUTER scope does not cover a mutation
+        # inside a closure (the closure runs at step-execution time)
+        m = mod("""
+            class Controller:
+                def _x_steps(self):
+                    def fn():
+                        self.standbys.remove(0)
+                    self._journal_standbys()
+                    return fn
+            """)
+        (f,) = run_one(JournalPass(), m)
+        assert "fn" in f.message
+
+    def test_run_begin_or_adopt_both_accepted(self):
+        begin = mod("""
+            class Controller:
+                def a(self):
+                    run = MigrationRun(self.clock)
+                    self._journal_run_begin(run, "a", {})
+            """)
+        adopt = mod("""
+            class Controller:
+                def b(self, jid):
+                    run = MigrationRun(self.clock)
+                    self.journal.append("run_adopt", {"run": jid})
+            """)
+        neither = mod("""
+            class Controller:
+                def c(self):
+                    run = MigrationRun(self.clock)
+            """)
+        assert run_one(JournalPass(), begin) == []
+        assert run_one(JournalPass(), adopt) == []
+        assert len(run_one(JournalPass(), neither)) == 1
+
+    def test_scoped_to_controller_module(self):
+        m = mod("""
+            class Other:
+                def f(self):
+                    self.standbys.remove(0)
+            """, rel="src/repro/core/engine.py")
+        assert run_one(JournalPass(), m) == []
+
+    def test_real_controller_is_clean(self):
+        src = (repo_root() / CONTROLLER_REL).read_text()
+        assert run_one(JournalPass(), Module(CONTROLLER_REL, src)) == []
+
+    @pytest.mark.parametrize("snippet", [
+        "self._journal_standbys()",
+        "self._journal_topology()",
+        "self._journal_epoch()",
+        "self._journal_storage_index()",
+    ])
+    def test_deleting_any_journal_call_is_caught(self, snippet):
+        # acceptance pin: strip ONE journal helper call from the real
+        # controller and the pass must fire (every call site is load-
+        # bearing for some trigger)
+        src = (repo_root() / CONTROLLER_REL).read_text()
+        assert snippet in src
+        mutated = src.replace(snippet, "pass", 1)
+        findings = run_one(JournalPass(), Module(CONTROLLER_REL, mutated))
+        assert findings, f"removing {snippet} went undetected"
+
+
+# ---------------------------------------------------- charge-coverage
+class TestChargePass:
+    def test_negative_unknown_lane(self):
+        m = mod("""
+            def f(clock):
+                clock.advance(1.0, "x", lane="bogus")
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "unknown lane" in f.message
+
+    def test_positive_known_and_threaded_lanes(self):
+        m = mod("""
+            def f(clock, lane):
+                clock.advance(1.0, "x", lane="downtime")
+                clock.advance(1.0, "y", lane=lane)
+                clock.advance(1.0, "z")
+            """)
+        assert run_one(ChargePass(), m) == []
+
+    def test_negative_computed_lane(self):
+        m = mod("""
+            def f(clock):
+                clock.advance(1.0, "x", lane="over" + "lap")
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "computed" in f.message
+
+    def test_conditional_lane_literals_checked(self):
+        ok = mod("""
+            def f(clock, run):
+                lane = "overlap" if run else "downtime"
+                clock.advance(1.0, "x", lane=lane)
+            """)
+        bad = mod("""
+            def f(clock, run):
+                clock.advance(1.0, "x",
+                              lane="overlap" if run else "bogus")
+            """)
+        assert run_one(ChargePass(), ok) == []
+        (f,) = run_one(ChargePass(), bad)
+        assert "bogus" in f.message
+
+    def test_negative_unknown_channel_kind(self):
+        m = mod("""
+            def f(clock):
+                clock.issue_async(("sidechannel", 3), 1.0, "x")
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "channel kind" in f.message
+
+    def test_negative_transfer_without_charge_kwarg(self):
+        m = mod("""
+            def f(self):
+                state_sync.leaver_to_joiner(
+                    self.engine, 0, 1, self.clock, self.cost)
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "charge=" in f.message
+
+    def test_negative_charge_false_without_accounting(self):
+        m = mod("""
+            def f(self):
+                state_sync.leaver_to_joiner(
+                    self.engine, 0, 1, self.clock, self.cost,
+                    charge=False)
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "never accounts" in f.message
+
+    def test_positive_charge_false_with_accounting(self):
+        m = mod("""
+            def f(self):
+                tr = state_sync.leaver_to_joiner(
+                    self.engine, 0, 1, self.clock, self.cost,
+                    charge=False)
+                self.clock.advance(tr.seconds, "par", lane="downtime")
+            """)
+        assert run_one(ChargePass(), m) == []
+
+    def test_negative_transfer_without_clock(self):
+        m = mod("""
+            def f(self):
+                state_sync.recover_state(self.engine, 0, 1, None)
+            """)
+        (f,) = run_one(ChargePass(), m)
+        assert "free-ride" in f.message
+
+    def test_real_tree_charge_mutations_caught(self):
+        # acceptance pin: un-thread charge= from the real controller
+        src = (repo_root() / CONTROLLER_REL).read_text()
+        assert "charge=False" in src
+        mutated = src.replace("charge=False)", ")", 1)
+        findings = run_one(ChargePass(), Module(CONTROLLER_REL, mutated))
+        assert any("charge=" in f.message for f in findings)
+
+
+# ------------------------------------------------------- determinism
+class TestDeterminismPass:
+    def test_negative_wall_clock(self):
+        m = mod("""
+            import time
+            def f():
+                return time.time()
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "wall-clock" in f.message
+
+    def test_perf_counter_allowed(self):
+        # the measured-compile seam is deliberate: sim mode replaces it
+        m = mod("""
+            import time
+            def f():
+                return time.perf_counter()
+            """)
+        assert run_one(DeterminismPass(), m) == []
+
+    def test_negative_unseeded_random(self):
+        m = mod("""
+            import random
+            def f(xs):
+                return random.choice(xs)
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "unseeded" in f.message
+
+    def test_seeded_rngs_allowed(self):
+        m = mod("""
+            import random
+            import numpy as np
+            def f(seed):
+                rng = random.Random(seed)
+                g = np.random.default_rng(seed)
+                return rng.random() + g.random()
+            """)
+        assert run_one(DeterminismPass(), m) == []
+
+    def test_negative_global_np_random(self):
+        m = mod("""
+            import numpy as np
+            def f():
+                return np.random.rand()
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "global numpy RNG" in f.message
+
+    def test_negative_set_iteration(self):
+        m = mod("""
+            def f(plan, cluster):
+                for mid in set(plan.replace.values()):
+                    cluster[mid].touch()
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "unordered set" in f.message
+
+    def test_sorted_set_iteration_allowed(self):
+        m = mod("""
+            def f(plan, cluster):
+                for mid in sorted(set(plan.replace.values())):
+                    cluster[mid].touch()
+            """)
+        assert run_one(DeterminismPass(), m) == []
+
+    def test_set_local_tracked_through_algebra(self):
+        m = mod("""
+            def f(run, done_before):
+                done = set(run.done)
+                for n in done - done_before:
+                    run.invalidate(n)
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "unordered set" in f.message
+
+    def test_order_free_reducers_exempt(self):
+        m = mod("""
+            def f(run, kinds, done_before):
+                redo = any(kinds.get(n) == "prepare"
+                           for n in done_before - set(run.done))
+                total = sum(1 for x in set(run.done))
+                names = sorted(n for n in set(run.done))
+                return redo, total, names
+            """)
+        assert run_one(DeterminismPass(), m) == []
+
+    def test_list_comprehension_over_set_flagged(self):
+        m = mod("""
+            def f(xs):
+                return [x + 1 for x in set(xs)]
+            """)
+        (f,) = run_one(DeterminismPass(), m)
+        assert "comprehension" in f.message
+
+
+# -------------------------------------------------------- delta-kinds
+GROUPS_OK = """
+    class DeltaPlan:
+        kind: str = "replace"
+
+    def compute_delta_plan(group):
+        return DeltaPlan()
+
+    def compute_reshard_plan(group):
+        return DeltaPlan(kind="reshard")
+
+    def compute_dp_resize_plan(group):
+        return DeltaPlan(kind="dp_resize")
+
+    def revert_delta(group, plan):
+        if plan.kind == "dp_resize":
+            pass
+        else:
+            assert plan.kind in ("replace", "reshard"), plan.kind
+    """
+
+
+def kinds_fixture(groups_src=GROUPS_OK, extra=()):
+    mods = [mod(groups_src, rel="src/repro/core/groups.py")]
+    mods.extend(extra)
+    return mods
+
+
+class TestKindsPass:
+    def test_positive_real_tree_surfaces(self):
+        mods = load_modules()
+        assert KindsPass().run_project(mods) == []
+
+    def test_negative_new_kind_fails_every_surface(self):
+        groups = GROUPS_OK + """
+    def compute_split_plan(group):
+        return DeltaPlan(kind="split")
+    """
+        mods = kinds_fixture(groups)
+        findings = KindsPass().run_project(mods)
+        assert any("'split'" in f.message and "no registered handler"
+                   in f.message for f in findings)
+
+    def test_negative_unknown_literal_typo(self):
+        two_phase = mod("""
+            def ccl_switchover(group):
+                plan = group.pending_plan
+                assert plan.kind == "repalce", plan
+            def ccl_reshard_switchover(group): pass
+            def ccl_resize_switchover(group): pass
+            """, rel="src/repro/core/two_phase.py")
+        findings = KindsPass().run_project(kinds_fixture(extra=[two_phase]))
+        assert any("unknown DeltaPlan kind 'repalce'" in f.message
+                   for f in findings)
+
+    def test_negative_unguarded_dispatch(self):
+        ctrl = mod("""
+            def _expected_steps(): pass
+            def _reshard_steps(): pass
+            def _dp_shrink_steps(): pass
+            def _dp_grow_steps(): pass
+            def _switch_step(g):
+                plan = g.pending_plan
+                if plan.kind == "reshard":
+                    pass
+                else:
+                    pass
+            """)
+        findings = KindsPass().run_project(kinds_fixture(extra=[ctrl]))
+        assert any("never mentions" in f.message for f in findings)
+
+    def test_positive_guarded_dispatch(self):
+        ctrl = mod("""
+            def _expected_steps(): pass
+            def _reshard_steps(): pass
+            def _dp_shrink_steps(): pass
+            def _dp_grow_steps(): pass
+            def _switch_step(g):
+                plan = g.pending_plan
+                if plan.kind == "reshard":
+                    pass
+                elif plan.kind == "dp_resize":
+                    pass
+                else:
+                    assert plan.kind == "replace", plan.kind
+            """)
+        assert KindsPass().run_project(kinds_fixture(extra=[ctrl])) == []
+
+    def test_negative_missing_handler_function(self):
+        state_sync = mod("""
+            def leaver_to_joiner(): pass
+            def regrow_staff(): pass
+            """, rel="src/repro/core/state_sync.py")
+        findings = KindsPass().run_project(
+            kinds_fixture(extra=[state_sync]))
+        assert any("reshard_in_place" in f.message and "does not exist"
+                   in f.message for f in findings)
+
+
+# --------------------------------------------------------- step-names
+class TestStepsPass:
+    def test_negative_step_outside_builder(self):
+        m = mod("""
+            def ad_hoc(run):
+                run.steps.append(Step("extra", "x", lambda: None))
+            """)
+        (f,) = run_one(StepsPass(), m)
+        assert "outside" in f.message
+
+    def test_positive_builder_with_stable_names(self):
+        m = mod("""
+            def _foo_steps(staff, affected):
+                steps = [Step(f"warmup:{staff[s]}", "warmup", None)
+                         for s in range(2)]
+                steps += [Step(f"switch:{g.gid}", "switch", None)
+                          for g in affected]
+                steps.append(Step("commit", "commit", None))
+                return steps
+            """)
+        assert run_one(StepsPass(), m) == []
+
+    def test_negative_computed_interpolation(self):
+        m = mod("""
+            def _foo_steps(clock):
+                return [Step(f"xfer:{clock.now()}", "xfer", None)]
+            """)
+        (f,) = run_one(StepsPass(), m)
+        assert "non-stable" in f.message
+
+    def test_negative_fully_computed_name(self):
+        m = mod("""
+            def _foo_steps(name):
+                return [Step(name.upper(), "x", None)]
+            """)
+        (f,) = run_one(StepsPass(), m)
+        assert "computed" in f.message
+
+    def test_migration_py_excluded(self):
+        m = mod("""
+            def anywhere():
+                return Step("x", "y", None)
+            """, rel="src/repro/core/migration.py")
+        assert run_one(StepsPass(), m) == []
+
+
+# ------------------------------------------------- pragma + baseline
+class TestPragmaAndBaseline:
+    def test_pragma_on_line_above_suppresses(self):
+        m = mod("""
+            class Controller:
+                def f(self, mid):
+                    # repro: allow(journal-coverage)
+                    self.standbys.remove(mid)
+            """)
+        assert run_one(JournalPass(), m) == []
+
+    def test_pragma_inline_suppresses(self):
+        m = mod("""
+            def f(clock):
+                clock.advance(1.0, "x", lane="bogus")  # repro: allow(charge-coverage)
+            """)
+        assert run_one(ChargePass(), m) == []
+
+    def test_pragma_for_other_pass_does_not_suppress(self):
+        m = mod("""
+            class Controller:
+                def f(self, mid):
+                    # repro: allow(determinism)
+                    self.standbys.remove(mid)
+            """)
+        assert len(run_one(JournalPass(), m)) == 1
+
+    def test_baseline_suppresses_matching_finding(self):
+        f = Finding("a.py", 3, "determinism", "error", "msg")
+        res = apply_baseline(
+            [f], [{"file": "a.py", "pass": "determinism", "message": "msg"}])
+        assert res.new == [] and res.suppressed == [f]
+        assert res.exit_code == EXIT_CLEAN
+
+    def test_stale_baseline_entry_fails_with_message(self):
+        stale = {"file": "a.py", "pass": "determinism",
+                 "message": "already fixed"}
+        res = apply_baseline([], [stale])
+        assert res.stale == [stale]
+        assert res.exit_code == EXIT_STALE_BASELINE
+        assert "remove from baseline" in render_human(res)
+
+    def test_new_finding_exits_nonzero(self):
+        f = Finding("a.py", 3, "determinism", "error", "msg")
+        res = apply_baseline([f], [])
+        assert res.exit_code == EXIT_FINDINGS
+
+    def test_baseline_identity_ignores_line_numbers(self):
+        f = Finding("a.py", 99, "determinism", "error", "msg")
+        res = apply_baseline(
+            [f], [{"file": "a.py", "pass": "determinism", "message": "msg"}])
+        assert res.new == []
+
+
+# ------------------------------------------------ real tree + CLI
+class TestRealTree:
+    def test_repo_is_clean_with_empty_baseline(self):
+        baseline_path = repo_root() / "analysis-baseline.json"
+        assert load_baseline(baseline_path) == [], \
+            "the checked-in baseline must stay empty: fix or pragma"
+        res = run(baseline_path=baseline_path)
+        assert res.new == [], "\n".join(f.render() for f in res.new)
+        assert res.stale == []
+        assert res.exit_code == EXIT_CLEAN
+
+    def test_cli_clean_run(self, capsys):
+        assert cli_main(["--baseline"]) == EXIT_CLEAN
+        out = capsys.readouterr().out
+        assert "0 finding(s)" in out
+
+    def test_cli_json_output(self, capsys):
+        code = cli_main(["--json"])
+        data = json.loads(capsys.readouterr().out)
+        assert code == EXIT_CLEAN
+        assert data["findings"] == []
+
+    def test_cli_flags_seeded_violation(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text("import time\n\ndef f():\n    return time.time()\n")
+        assert cli_main([str(bad)]) == EXIT_FINDINGS
+        assert "wall-clock" in capsys.readouterr().out
+
+    def test_cli_stale_baseline(self, tmp_path, capsys):
+        stale = tmp_path / "baseline.json"
+        stale.write_text(json.dumps({"findings": [{
+            "file": "x.py", "pass": "determinism", "message": "gone"}]}))
+        clean = tmp_path / "clean.py"
+        clean.write_text("def f():\n    return 1\n")
+        code = cli_main([str(clean), "--baseline", str(stale)])
+        assert code == EXIT_STALE_BASELINE
+        assert "remove from baseline" in capsys.readouterr().out
+
+    def test_render_json_roundtrip(self):
+        f = Finding("a.py", 1, "determinism", "error", "m")
+        res = apply_baseline([f], [])
+        data = json.loads(render_json(res))
+        assert data["exit_code"] == EXIT_FINDINGS
+        assert data["findings"][0]["file"] == "a.py"
