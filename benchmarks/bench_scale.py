@@ -13,9 +13,10 @@ Axes swept:
   - model size at fixed 128 GPUs (gpt-2.7b .. yi-34b)
   - storage bandwidth per fig 17 (TrainMover's standby recovery is
     insensitive; the checkpoint-restart baseline scales with it)
-  - intra-machine re-shard vs migrate per lost-GPU count at yi-34b,
-    settling the open `CostModel.reshard_min_fraction` question at
-    state sizes where lost-fraction transfer dominates
+  - the migrate / reshard / dp_shrink decision boundary per lost-GPU
+    count at yi-34b (measured beside the PolicyEngine's predicted
+    breakdown, with auto's regret against the best fixed policy) —
+    the sweep that retired the fixed reshard_min_fraction threshold
   - fleet-size projections (fig 9) and rebalance ETTR (fig 16) from
     the measured 1024-GPU anchors
 
@@ -174,39 +175,80 @@ def bandwidth_axis(cost: CostModel = COST, machines: int = 4,
     return rows
 
 
-def reshard_settlement(cost: CostModel = COST,
-                       machines: int = 8) -> dict:
-    """Settle `reshard_min_fraction` at yi-34b state sizes: per lost-
-    GPU count, measure in-place re-shard (lost slices re-fetch from
-    the DP peer) vs migrate-away downtime through the real
-    controller, and report the smallest surviving fraction at which
-    re-shard still wins."""
+def policy_boundary(cost: CostModel = COST,
+                    machines: int = 8) -> dict:
+    """The measured migrate / reshard / dp_shrink decision boundary at
+    yi-34b state sizes (the sweep that retired the fixed 0.5
+    threshold). Per lost-GPU count: every mechanically-executable
+    fixed policy runs through the real controller, `auto` runs beside
+    them, and the PolicyEngine's predicted breakdown is recorded next
+    to the measurement. Regret compares auto against the best fixed
+    policy the decision ranked FEASIBLE — dp_shrink's tiny downtime
+    is reported (the crossover surface needs it) but excluded while
+    spare capacity exists, because it trades committed throughput the
+    downtime lane never sees."""
+    from repro.core.campaign import build_controller
+
     cfg = sim_cfg(machines, "yi-34b")
     ref = reference_run(cfg, cost)
     rows = []
-    for lose in range(1, GPUS_PER_MACHINE):
+    for lose in range(1, GPUS_PER_MACHINE + 1):
         surviving = (GPUS_PER_MACHINE - lose) / GPUS_PER_MACHINE
-        rs = run_scenario(
-            Scenario(f"gpu-reshard-{lose}", "gpu_degrade", "d0s0",
-                     "between_iter", "reshard", {"lose_gpus": lose}),
+        # predicted breakdown from a probe controller at the exact
+        # fault state (same telemetry the auto run's decision sees)
+        probe = build_controller(cfg, cfg.standby_count, cost)
+        victim = probe.engine.grid[(0, 0)]
+        probe.cluster[victim].degrade_gpu(lose)
+        ranked = probe.policy_engine.score(
+            probe._policy_telemetry(victim), "gpu_fault")
+        predicted = {c.policy: {"feasible": c.feasible,
+                                "downtime_s": round(c.downtime_s, 3),
+                                "tail_s": round(c.tail_s, 3)}
+                     for c in ranked}
+        feasible = [c.policy for c in ranked if c.feasible]
+        measured: Dict[str, float] = {}
+        for pol in ("reshard", "migrate", "dp_shrink"):
+            if pol == "reshard" and (surviving <= 0.0 or
+                                     surviving
+                                     < cost.reshard_min_fraction):
+                continue          # below the clamp: not executable
+            rec = "reshard" if pol == "reshard" else "migration"
+            r = run_scenario(
+                Scenario(f"gpu-{pol}-{lose}", "gpu_degrade", "d0s0",
+                         "between_iter", rec,
+                         {"policy": pol, "lose_gpus": lose}),
+                cfg, ref, cost)
+            assert r.loss_parity, (pol, lose)
+            measured[pol] = r.downtime_s
+        auto = run_scenario(
+            Scenario(f"gpu-auto-{lose}", "gpu_degrade", "d0s0",
+                     "between_iter", "migration",
+                     {"policy": "auto", "lose_gpus": lose}),
             cfg, ref, cost)
-        mg = run_scenario(
-            Scenario(f"gpu-migrate-{lose}", "gpu_degrade", "d0s0",
-                     "between_iter", "migration", {"lose_gpus": lose}),
-            cfg, ref, cost)
+        assert auto.loss_parity, ("auto", lose)
+        best_fixed = min((p for p in measured if p in feasible),
+                         key=lambda p: measured[p])
+        regret = round(auto.downtime_s - measured[best_fixed], 6)
         rows.append({"lose_gpus": lose,
                      "surviving_fraction": surviving,
-                     "reshard_s": round(rs.downtime_s, 3),
-                     "migrate_s": round(mg.downtime_s, 3),
-                     "winner": ("reshard"
-                                if rs.downtime_s <= mg.downtime_s
-                                else "migrate")})
-    winning = [r["surviving_fraction"] for r in rows
-               if r["winner"] == "reshard"]
-    settled = min(winning) if winning else 1.0
+                     "reshard_s": (round(measured["reshard"], 3)
+                                   if "reshard" in measured else None),
+                     "migrate_s": round(measured["migrate"], 3),
+                     "dp_shrink_s": round(measured["dp_shrink"], 3),
+                     "auto_s": round(auto.downtime_s, 3),
+                     "auto_choice": auto.policy_choice,
+                     "best_fixed": best_fixed,
+                     "regret_s": regret,
+                     "predicted": predicted})
+    reshard_wins = [r["surviving_fraction"] for r in rows
+                    if r["reshard_s"] is not None
+                    and r["reshard_s"] <= r["migrate_s"]]
     return {"model": "yi-34b", "gpus": machines * GPUS_PER_MACHINE,
-            "rows": rows, "settled_min_fraction": settled,
-            "current_default": cost.reshard_min_fraction}
+            "rows": rows,
+            "reshard_wins_down_to_fraction":
+                min(reshard_wins) if reshard_wins else 1.0,
+            "regret_max_s": max(r["regret_s"] for r in rows),
+            "safety_clamp": cost.reshard_min_fraction}
 
 
 def fig9_fleet(cost: CostModel = COST) -> List[dict]:
@@ -273,19 +315,26 @@ def write_outputs(payload: dict, json_path: str, md_path: str) -> None:
                        ("Model-size axis", "model_axis"),
                        ("Fig 17: storage-bandwidth sensitivity",
                         "bandwidth_axis"),
-                       ("reshard_min_fraction settlement (yi-34b)",
-                        None),
+                       ("Policy decision boundary (yi-34b)", None),
                        ("Fig 9: wasted GPU-hours per week", "fig9"),
                        ("Fig 16: rebalance ETTR", "fig16")):
         lines += ["", f"## {title}", ""]
         if key is None:
-            st = payload["reshard_settlement"]
-            lines += _md_table(st["rows"])
-            lines += ["", f"Settled `reshard_min_fraction`: re-shard "
-                          f"wins down to surviving fraction "
-                          f"**{st['settled_min_fraction']}** "
-                          f"(current default "
-                          f"{st['current_default']})."]
+            st = payload["policy_boundary"]
+            rows = [{k: v for k, v in r.items() if k != "predicted"}
+                    for r in st["rows"]]
+            lines += _md_table(rows)
+            lines += ["", "Measured crossover surface per lost-GPU "
+                          "count: re-shard wins on downtime down to "
+                          f"surviving fraction "
+                          f"**{st['reshard_wins_down_to_fraction']}** "
+                          f"(= the `reshard_min_fraction` safety "
+                          f"clamp, {st['safety_clamp']}); dp_shrink's "
+                          "lower downtime is excluded while spare "
+                          "capacity exists (it trades committed "
+                          "throughput). `auto` regret vs the best "
+                          "feasible fixed policy: max "
+                          f"**{st['regret_max_s']} s**."]
         else:
             lines += _md_table(payload[key])
     lines += ["", "## Claims", ""]
@@ -311,7 +360,7 @@ def run(smoke: bool = False, write: bool = True) -> dict:
     fig8 = fig8_scale()
     models = model_axis()
     bw = bandwidth_axis()
-    reshard = reshard_settlement()
+    boundary = policy_boundary()
     fig9 = fig9_fleet()
     fig16 = fig16_ettr()
 
@@ -338,8 +387,10 @@ def run(smoke: bool = False, write: bool = True) -> dict:
         "fig9_reduction_vs_no_standby_64k": round(red_ns, 3),
         "fig9_reduction_vs_megatron_64k": round(red_mg, 3),
         "fig16_ettr_1024": fig16[-1]["trainmover_simexec"],
-        "reshard_settled_min_fraction":
-            reshard["settled_min_fraction"],
+        "policy_reshard_wins_down_to_fraction":
+            boundary["reshard_wins_down_to_fraction"],
+        "policy_regret_max_s": boundary["regret_max_s"],
+        "policy_safety_clamp": boundary["safety_clamp"],
     }
     # the paper-shape assertions BENCH_scale exists to pin
     assert growth_e < 10.0 and growth_u < 10.0, claims
@@ -350,6 +401,12 @@ def run(smoke: bool = False, write: bool = True) -> dict:
     assert claims["fig17_ckpt_bw_delta_s"] > 20.0, claims
     assert red_ns > 0.0 and red_mg > 0.5, claims
     assert claims["fig16_ettr_1024"] >= 0.97, claims
+    # the policy layer's calibration: measured re-shard wins at every
+    # fraction down to the safety clamp, and auto's dispatch is
+    # bit-identical to the best feasible fixed policy (zero regret)
+    assert claims["policy_reshard_wins_down_to_fraction"] \
+        == claims["policy_safety_clamp"], claims
+    assert claims["policy_regret_max_s"] == 0.0, claims
 
     payload = {"config": {"gpus_per_machine": GPUS_PER_MACHINE,
                           "machines_axis": list(MACHINES_AXIS),
@@ -357,7 +414,7 @@ def run(smoke: bool = False, write: bool = True) -> dict:
                           "storage_bw_gb_s": list(STORAGE_BW_GBS),
                           "engine": "sim-exec"},
                "fig8_scale": fig8, "model_axis": models,
-               "bandwidth_axis": bw, "reshard_settlement": reshard,
+               "bandwidth_axis": bw, "policy_boundary": boundary,
                "fig9": fig9, "fig16": fig16, "claims": claims,
                "total_wall_s": round(time.time() - t0, 1)}
     if write:
@@ -367,7 +424,9 @@ def run(smoke: bool = False, write: bool = True) -> dict:
     emit(fig8, "Fig 8 shape: sim-exec downtime vs scale")
     emit(models, "Model-size axis")
     emit(bw, "Fig 17: storage-bandwidth sensitivity")
-    emit(reshard["rows"], "reshard_min_fraction settlement (yi-34b)")
+    emit([{k: v for k, v in r.items() if k != "predicted"}
+          for r in boundary["rows"]],
+         "policy decision boundary (yi-34b)")
     emit(fig16, "Fig 16: rebalance ETTR (measured)")
     print(csv_line("bench_scale_tm_1024_expected_us",
                    float(by_gpus[1024]["expected_s"]) * 1e6,

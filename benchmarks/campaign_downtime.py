@@ -78,6 +78,19 @@ def run(reduced: bool = True, crash_only: bool = False) -> None:
           f";overflow={len(s['overflow_fallback_scenarios'])}"
           f";parity={s['all_loss_parity']}")
     assert s["all_loss_parity"], "a scenario diverged from the reference"
+    # the policy axis' regret table: auto vs each feasible fixed policy
+    # per decision scenario. auto must never lose — regret exactly 0.0
+    # with bitwise parity on every counterfactual — on the reduced
+    # matrix (push smoke) and the full nightly matrix alike.
+    for row in payload["policy_axis"]:
+        print(f"policy-axis,{row['scenario']},auto={row['auto_choice']},"
+              f"best_fixed={row['best_fixed']},"
+              f"regret_s={row['policy_regret_s']:.6f},"
+              f"parity={row['loss_parity']}")
+    print(f"policy,regret_max_s={s['policy_regret_max_s']:.6f},"
+          f"auto_never_worse_ok={s['auto_never_worse_ok']}")
+    assert s["auto_never_worse_ok"], \
+        "auto lost to a fixed policy (or broke parity) on the axis"
     # the control-plane claim: restart + replay + re-registration + run
     # adoption stays inside the same per-event envelope as data-plane
     # standby recovery

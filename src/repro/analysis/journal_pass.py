@@ -32,6 +32,7 @@ PASS_ID = "journal-coverage"
 JOURNAL_HELPERS = {
     "_journal_topology", "_journal_standbys", "_journal_storage_index",
     "_journal_epoch", "_journal_run_begin", "_journal_run_meta",
+    "_journal_policy",
 }
 
 LIST_MUTATORS = {"append", "remove", "pop", "clear", "extend", "insert"}
@@ -127,6 +128,14 @@ def _call_triggers(node: ast.Call):
         yield (node, {"_journal_topology"},
                "run.execute() commits switch/swap steps")
         yield node, {"_journal_epoch"}, "run.execute() advances the epoch"
+
+    # ---- recovery-policy decisions (core/policy.py)
+    # a decision that dispatches a recovery must be durable BEFORE the
+    # dispatch, or a crash-restarted controller adopting the run can
+    # not see the choice it is replaying
+    if recv == "self.policy_engine" and t == "decide":
+        yield (node, {"_journal_policy"},
+               "policy_engine.decide() picks a recovery")
 
     # ---- run lifecycle
     if isinstance(func, ast.Name) and func.id == "MigrationRun":

@@ -59,14 +59,26 @@ class CostModel:
     # its shard across the survivors in place (cheap: DP-peer re-fetch
     # of the lost slices + NVLink re-layout + QP re-bind, but the
     # machine trains slowed until maintenance) or migrate away whole
-    # (expected-migration downtime, full speed after). The auto policy
-    # re-shards while surviving/total >= this fraction; campaigns sweep
-    # it to compare the two recoveries' downtime. Measured (sim-exec,
-    # BENCH_scale.json reshard_settlement): at yi-34b state sizes
-    # re-shard wins down to 1/8 surviving, so 0.5 is deliberately
-    # conservative — it bounds the degraded-training tail, not the
-    # recovery downtime.
-    reshard_min_fraction: float = 0.5
+    # (expected-migration downtime, full speed after). The choice is a
+    # live CostModel query (core/policy.py PolicyEngine) over the
+    # measured terms; this knob is NOT the decision any more — it is
+    # the safety clamp below which in-place re-shard is infeasible
+    # (too few survivors to host the shard at a bounded slowdown).
+    # Calibrated to the measurement that retired the old 0.5 default:
+    # BENCH_scale.json policy_boundary shows re-shard winning on
+    # downtime at every surviving fraction down to 1/8 at yi-34b state
+    # sizes (lost-fraction re-fetch + NVLink re-layout always beats a
+    # fully-exposed whole-state ship), so the clamp sits at exactly
+    # that measured floor.
+    reshard_min_fraction: float = 0.125
+
+    # Expected time until the scheduler hands capacity back (spot
+    # reclaim windows / maintenance rotations, same 30-120 s regime as
+    # the advance notices below). The PolicyEngine charges a degraded
+    # configuration (re-shard slowdown, DP-shrink hosting load) its
+    # throughput-loss tail over this horizon — the term that breaks
+    # downtime ties toward the policy that degrades less.
+    maintenance_horizon_s: float = 120.0
 
     # ---- control-plane durability (self-healing controller)
     # The controller's durable state is a small append-only journal on

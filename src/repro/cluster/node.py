@@ -119,6 +119,17 @@ class Machine:
         self.device = MemoryLedger(self.device_capacity)
         self.host = MemoryLedger(self.host.capacity)
 
+    @property
+    def healthy_fraction(self) -> float:
+        """Surviving-device fraction after GPU-granular faults: 1.0
+        for a pristine machine, 0.0 when every device failed
+        (`failed_gpus` is clamped to `gpus` by degrade_gpu). The ONE
+        definition both the slowdown model below and the recovery
+        policy layer (core/policy.py, Controller.gpu_fault) read — a
+        second hand-rolled derivation of this ratio is how the two
+        sites drift."""
+        return (self.gpus - self.failed_gpus) / self.gpus
+
     def degrade_gpu(self, n: int = 1) -> None:
         """GPU-granularity fault (§9 future work): `n` devices on this
         machine fail but the machine survives — state stays resident
@@ -128,9 +139,10 @@ class Machine:
         goes False) — only the slowdown denominator floors at one
         surviving device."""
         self.failed_gpus = min(self.failed_gpus + n, self.gpus)
-        healthy = max(self.gpus - self.failed_gpus, 1)
+        floor = 1.0 / self.gpus           # >= one surviving device
         self.straggle_factor = max(self.straggle_factor,
-                                   self.gpus / healthy)
+                                   1.0 / max(self.healthy_fraction,
+                                             floor))
 
 
 class Cluster:

@@ -31,6 +31,8 @@ from repro.core.migration import (ControllerCrash, CrashPoint,
                                   DeadlinePoint, FaultPoint,
                                   MidSwitchFault, MigState, MigrationRun,
                                   NoticeExpired, Step)
+from repro.core.policy import (KNOWN_POLICIES, PolicyDecision,
+                               PolicyEngine, Telemetry)
 from repro.train.checkpoint import InMemoryCheckpoint, tree_bytes
 
 
@@ -104,6 +106,11 @@ class Controller:
         # surviving this instance's death)
         self.journal = journal if journal is not None \
             else ControlJournal(self.clock, cost)
+        # telemetry-driven recovery-policy layer (core/policy.py):
+        # consulted by the `auto` dispatch sites only — a fixed policy
+        # argument bypasses it entirely, so fixed-policy runs charge
+        # the exact same ledger entries they always did
+        self.policy_engine = PolicyEngine(cost)
 
     # ---------------------------------------------- journal plumbing
     def _journal_topology(self) -> None:
@@ -149,6 +156,69 @@ class Controller:
 
     def _journal_run_meta(self, run: MigrationRun, **data) -> None:
         self.journal.append("run_meta", {"run": run.jid, **data})
+
+    def _journal_policy(self, decision: PolicyDecision) -> None:
+        """Durable decision record, written BEFORE dispatch: a crash
+        anywhere in the chosen recovery leaves the ranked choice in
+        the journal, so the adopting controller (and the audit trail)
+        sees the same decision it is replaying. Appends charge the
+        overlap lane, so consulting the policy never widens a downtime
+        window — auto's downtime stays bit-identical to the fixed
+        policy it dispatches into."""
+        self.journal.append("policy", decision.to_record())
+
+    def _victim_state_bytes(self, victim: int) -> int:
+        """Flat stage state (params + optimizer) the recovery must
+        move. Read from the victim's own resident payload; a victim
+        already evicted falls back to a same-stage DP replica (bitwise
+        the same shard) and, failing that, to zero."""
+        candidates = [victim]
+        try:
+            _, s = self.engine.coords_of(victim)
+            candidates += [m for (dd, ss), m in self.engine.grid.items()
+                           if ss == s and m != victim]
+        except (AssertionError, KeyError):
+            pass
+        for mid in candidates:
+            pl = self.cluster[mid].payload
+            if "params" in pl or "param_segs" in pl:
+                return int(self.engine.state_bytes(mid))
+        return 0
+
+    def _policy_telemetry(self, victim: int,
+                          notice_s: float = 0.0) -> Telemetry:
+        """Cluster snapshot the PolicyEngine scores against — pulled
+        live from the ledgers, never cached, so the decision always
+        reflects the pool as it stands at fault time."""
+        from repro.models.registry import count_params
+        m = self.cluster[victim]
+        return Telemetry(
+            victim=victim,
+            surviving_fraction=m.healthy_fraction if m.alive else 0.0,
+            state_bytes=self._victim_state_bytes(victim),
+            standbys=len(self.standbys),
+            idle_spares=len(self._idle_spares()),
+            elastic_pool=self.elastic_pool,
+            degraded_mode=self.degraded_mode,
+            can_shrink=self._can_shrink(victim),
+            dp=self.engine.dp, pp=self.engine.pp,
+            affected_groups=len(self._affected_groups([victim])),
+            channels=self.cost.channels_per_group,
+            storage_ok=bool(self.storage),
+            storage_bw=self.storage_bw,
+            notice_s=notice_s,
+            model_params=float(count_params(self.engine.cfg)),
+            total_gpus=sum(self.cluster[t].gpus
+                           for t in self._training_mids()))
+
+    def _consult_policy(self, victim: int, kind: str,
+                        notice_s: float = 0.0) -> PolicyDecision:
+        """One policy consultation: capture telemetry, rank the
+        candidates, journal the decision, return it for dispatch."""
+        tele = self._policy_telemetry(victim, notice_s=notice_s)
+        decision = self.policy_engine.decide(tele, kind)
+        self._journal_policy(decision)
+        return decision
 
     # ------------------------------------------------------------ setup
     def bootstrap_job(self, machine_ids: List[int],
@@ -416,9 +486,25 @@ class Controller:
         the run absorbs it as a mid-switch fault on the leaver — benign
         when the state already shipped, the unexpected-failure path
         otherwise. Either way, once the run commits the machine is
-        GONE: the preemption executes even when the drain beat it."""
+        GONE: the preemption executes even when the drain beat it.
+
+        The PolicyEngine is consulted first: with any spare capacity
+        the drain always ranks first (the notice window hides the state
+        ship), but a notice landing on a dry pool now retires the
+        leaver's DP chain — or falls back to checkpoint-restart —
+        instead of unconditionally draining into a pool that cannot
+        supply a joiner."""
         if notice_s is None:
             notice_s = self.cost.preemption_notice_s
+        chosen = self._consult_policy(leaver, "preemption",
+                                      notice_s=notice_s).chosen
+        if chosen == "dp_shrink":
+            # dp_shrink's detect step fails the leaver: the provider
+            # takes the machine back either way
+            return self.dp_shrink(leaver, inject=inject, crash=crash)
+        if chosen == "ckpt_restart":
+            return self.checkpoint_restart(leaver)
+        assert chosen == "migrate", chosen
         rep = self.expected_migration(
             [leaver], train_during_prep=train_during_prep,
             inject=inject, crash=crash, notice_s=notice_s)
@@ -723,12 +809,14 @@ class Controller:
         if (self.degraded_mode and use_standby and not self.standbys
                 and not self.elastic_pool and not self._idle_spares()):
             # pool-exhausting storm: no standby, no spare, no elastic
-            # growth. Retire the victim's DP chain and keep training
-            # degraded (the chain's survivors replenish the pool for
-            # the NEXT fault) — unless this is the last chain, where
-            # only the checkpoint-restart baseline remains.
-            if self._can_shrink(failed):
+            # growth — migrate is infeasible, so the PolicyEngine ranks
+            # what remains (DP-chain retirement while more than one
+            # chain is staffed, else the checkpoint-restart baseline)
+            # and journals the choice before dispatch.
+            chosen = self._consult_policy(failed, "failure").chosen
+            if chosen == "dp_shrink":
                 return self.dp_shrink(failed, inject=inject, crash=crash)
+            assert chosen == "ckpt_restart", chosen
             return self.checkpoint_restart(failed)
         rep = MigrationReport("unexpected")
         affected = self._affected_groups([failed])
@@ -1480,9 +1568,10 @@ class Controller:
     def gpu_fault(self, victim: Optional[int] = None,
                   inject: Optional[FaultPoint] = None,
                   policy: str = "migrate",
-                  lose: int = 1) -> MigrationReport:
+                  lose: int = 1,
+                  crash: Optional[CrashPoint] = None) -> MigrationReport:
         """GPU-granularity fault (§9 future work): `lose` devices on
-        the victim degrade instead of the machine dying. Two recovery
+        the victim degrade instead of the machine dying. Recovery
         policies, selectable per fault (Chameleon-style):
 
         - "migrate": state stays resident and the machine keeps
@@ -1492,22 +1581,34 @@ class Controller:
         - "reshard": the machine stays in the grid and re-splits its
           shard across the surviving devices in place (ElasWave-style)
           — cheaper downtime, degraded throughput until maintenance.
-        - "auto": re-shard while the surviving-device fraction is at
-          least CostModel.reshard_min_fraction, else migrate.
+        - "dp_shrink" / "ckpt_restart": the degraded-continuation and
+          full-restart recoveries, dispatchable directly (the campaign
+          policy axis) though `auto` only reaches them when the pool
+          offers nothing better.
+        - "auto": consult the PolicyEngine (core/policy.py) — rank
+          every feasible recovery by CostModel-predicted downtime over
+          live telemetry, journal the decision, dispatch the winner.
+          (Used to be a fixed reshard_min_fraction threshold; the knob
+          survives only as the engine's re-shard safety clamp.)
         """
         victim = victim if victim is not None else self._training_mids()[0]
         m = self.cluster[victim]
         m.degrade_gpu(lose)
         if policy == "auto":
-            surviving = (m.gpus - m.failed_gpus) / m.gpus
-            policy = ("reshard"
-                      if surviving >= self.cost.reshard_min_fraction
-                      else "migrate")
+            policy = self._consult_policy(victim, "gpu_fault").chosen
         if policy == "reshard":
-            return self.reshard_recovery(victim, inject=inject)
-        assert policy == "migrate", policy
+            return self.reshard_recovery(victim, inject=inject,
+                                         crash=crash)
+        if policy == "dp_shrink":
+            return self.dp_shrink(victim, inject=inject, crash=crash)
+        if policy == "ckpt_restart":
+            return self.checkpoint_restart(victim)
+        if policy != "migrate":
+            raise ValueError(f"unknown recovery policy {policy!r}; "
+                             f"known: {', '.join(KNOWN_POLICIES)} "
+                             "(or 'auto')")
         rep = self.expected_migration([victim], train_during_prep=1,
-                                      inject=inject)
+                                      inject=inject, crash=crash)
         rep.kind = "gpu_degrade"
         return rep
 

@@ -48,6 +48,7 @@ RECORD_TYPES = frozenset((
     "run_resume",        # the run absorbed a fault and resumed
     "run_meta",          # op-specific adoption context (pairing, ...)
     "run_adopt",         # a restarted controller adopted the run
+    "policy",            # a PolicyEngine decision: ranking + telemetry
     "snapshot",          # compaction: the materialized state itself
 ))
 
@@ -64,6 +65,7 @@ def empty_state() -> dict:
         "storage_index": [],   # [mid, step, [d, s]] triples
         "epoch": [],           # [mid, step] pairs
         "runs": {},            # jid -> run record (see _apply_run_begin)
+        "policies": [],        # PolicyDecision.to_record() dicts, in order
     }
 
 
@@ -90,6 +92,11 @@ def apply_record(state: dict, rec: dict) -> dict:
         state["storage_index"] = [list(e) for e in data["entries"]]
     elif rtype == "epoch":
         state["epoch"] = [list(p) for p in data["sig"]]
+    elif rtype == "policy":
+        # setdefault: snapshots taken before the policy layer existed
+        # materialize without the key, and must stay replayable
+        state.setdefault("policies", []).append(
+            json.loads(json.dumps(data)))
     elif rtype == "run_begin":
         state["runs"][data["run"]] = {
             "label": data["label"], "op": data["op"],

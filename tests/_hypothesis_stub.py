@@ -248,6 +248,34 @@ def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
         draw, f"dictionaries({keys.label},{values.label})", shrink)
 
 
+def fixed_dictionaries(mapping: dict) -> SearchStrategy:
+    """Dict strategy with a FIXED key set and a per-key value strategy
+    (real-hypothesis surface). The shape the policy tests draw —
+    ``{"reshard_min_fraction": floats(...), "standby_count":
+    integers(...)}`` — keeps every knob present in every example, so a
+    falsifying knob combination stays a complete, replayable config.
+
+    Shrinks one knob at a time via that knob's own strategy
+    (deterministic key order), so the minimal example differs from a
+    passing config in as few knobs as possible and every intermediate
+    candidate is itself a drawable config."""
+    items = sorted(mapping.items(), key=lambda kv: repr(kv[0]))
+
+    def draw(rng):
+        return {k: s.draw(rng) for k, s in items}
+
+    def shrink(v):
+        out = []
+        for k, s in items:
+            for cand in s.shrink(v[k]):
+                out.append({**v, k: cand})
+        return out
+    return SearchStrategy(
+        draw,
+        f"fixed_dictionaries({{{', '.join(repr(k) for k, _ in items)}}})",
+        shrink)
+
+
 def permutations(values: Sequence) -> SearchStrategy:
     values = list(values)
 
@@ -388,7 +416,7 @@ def install() -> None:
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
                  "permutations", "just", "composite", "lists", "tuples",
-                 "dictionaries", "text"):
+                 "dictionaries", "fixed_dictionaries", "text"):
         setattr(strat, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

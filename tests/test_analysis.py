@@ -99,6 +99,25 @@ class TestJournalPass:
         assert run_one(JournalPass(), adopt) == []
         assert len(run_one(JournalPass(), neither)) == 1
 
+    def test_unjournaled_policy_decision_is_caught(self):
+        m = mod("""
+            class Controller:
+                def _consult_policy(self, victim, kind):
+                    return self.policy_engine.decide(tele, kind)
+            """)
+        (f,) = run_one(JournalPass(), m)
+        assert "_journal_policy" in f.message
+
+    def test_journaled_policy_decision_is_clean(self):
+        m = mod("""
+            class Controller:
+                def _consult_policy(self, victim, kind):
+                    decision = self.policy_engine.decide(tele, kind)
+                    self._journal_policy(decision)
+                    return decision
+            """)
+        assert run_one(JournalPass(), m) == []
+
     def test_scoped_to_controller_module(self):
         m = mod("""
             class Other:
@@ -116,6 +135,7 @@ class TestJournalPass:
         "self._journal_topology()",
         "self._journal_epoch()",
         "self._journal_storage_index()",
+        "self._journal_policy(decision)",
     ])
     def test_deleting_any_journal_call_is_caught(self, snippet):
         # acceptance pin: strip ONE journal helper call from the real

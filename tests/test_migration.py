@@ -487,8 +487,10 @@ def test_reshard_run_survives_its_own_machine_dying(reference):
 
 @pytest.mark.slow
 def test_gpu_fault_auto_policy_picks_by_surviving_fraction(reference):
-    """The CostModel knob: a light loss re-shards in place, a heavy
-    loss migrates away after all."""
+    """The PolicyEngine decision: any partial loss re-shards in place
+    (the measured boundary — lost-fraction re-fetch always beats a
+    fully-exposed whole-state ship), and only a machine with NOTHING
+    surviving migrates away after all."""
     ctl = campaign.build_controller(CFG, standby_count=0)
     losses = {0: ctl.engine.losses[0]}
     campaign._train_to(ctl, 1 + CFG.warmup_iters, losses)
@@ -496,15 +498,27 @@ def test_gpu_fault_auto_policy_picks_by_surviving_fraction(reference):
     rep1 = ctl.gpu_fault(light, policy="auto")          # 7/8 survive
     assert rep1.kind == "gpu_reshard"
     assert light in ctl.engine.grid.values()
-    heavy = ctl.engine.grid[(1, 1)]
+    # 3/8 surviving used to hard-migrate under the old 0.5 threshold;
+    # the corrected policy re-shards (above the 0.125 safety clamp,
+    # and strictly cheaper on predicted AND measured downtime)
+    partial = ctl.engine.grid[(1, 1)]
+    rep_mid = ctl.gpu_fault(partial, policy="auto", lose=5)
+    assert rep_mid.kind == "gpu_reshard"
+    assert partial in ctl.engine.grid.values()
+    heavy = ctl.engine.grid[(1, 0)]
     step0, nloss0 = ctl.engine.step_count, len(ctl.engine.losses)
-    rep2 = ctl.gpu_fault(heavy, policy="auto", lose=5)  # 3/8 survive
+    rep2 = ctl.gpu_fault(heavy, policy="auto",
+                         lose=ctl.cluster[heavy].gpus)   # 0 survive
     # the iteration committed during the migrate-path prep lands in
     # the loss map too
     for i, st in enumerate(range(step0, ctl.engine.step_count)):
         losses[st] = ctl.engine.losses[nloss0 + i]
     assert rep2.kind == "gpu_degrade"
     assert heavy not in ctl.engine.grid.values()
+    # every auto consultation left a journaled decision record
+    pols = ctl.journal.replay()["policies"]
+    assert [p["chosen"] for p in pols] == ["reshard", "reshard",
+                                           "migrate"]
     campaign._train_to(ctl, 1 + CFG.total_iters, losses)
     assert all(losses[k] == reference[k] for k in reference)
 
